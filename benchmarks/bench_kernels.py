@@ -1,0 +1,91 @@
+"""Dispatch-kernel microbenchmarks (the paper's measured hot spot,
+Table 2 / Fig 12-13): per-call latency of the allocation scoring and the
+EBF shadow prefix scan — pure-Python loop vs vectorized (jnp ref path;
+the Pallas kernels execute this same program tiled into VMEM on TPU)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.kernels import ref
+
+from .common import emit, scaled
+
+import jax
+import jax.numpy as jnp
+
+
+def python_alloc_loop(avail, cap, req):
+    n = avail.shape[0]
+    fit = np.zeros(n, np.int32)
+    score = np.zeros(n, np.float32)
+    for i in range(n):
+        ok = True
+        s = 0.0
+        for j in range(avail.shape[1]):
+            if avail[i, j] < req[j]:
+                ok = False
+            c = cap[i, j] if cap[i, j] > 0 else 1
+            s += (cap[i, j] - avail[i, j]) / c
+        fit[i] = 1 if ok else 0
+        score[i] = s
+    return fit, score
+
+
+def _time(fn, *args, reps=20):
+    fn(*args)                      # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+    return 1e6 * (time.perf_counter() - t0) / reps
+
+
+def run(out_dir: str = "results/bench") -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    rng = np.random.default_rng(0)
+    rows = {}
+    for n_nodes in (1024, 16384):
+        r = 4
+        cap = rng.integers(1, 8, (n_nodes, r)).astype(np.int32)
+        avail = rng.integers(0, 8, (n_nodes, r)).clip(0, cap).astype(np.int32)
+        req = rng.integers(0, 4, (r,)).astype(np.int32)
+
+        t_py = _time(python_alloc_loop, avail, cap, req, reps=3)
+        jref = jax.jit(ref.alloc_score_ref)
+        ja, jc, jr = jnp.asarray(avail), jnp.asarray(cap), jnp.asarray(req)
+        t_vec = _time(lambda: jax.block_until_ready(jref(ja, jc, jr)))
+        rows[f"alloc_score/n{n_nodes}"] = {
+            "python_us": t_py, "vector_us": t_vec,
+            "speedup": t_py / t_vec}
+        emit(f"kernels/alloc_score_n{n_nodes}", t_vec,
+             f"python_us={t_py:.0f};speedup={t_py/t_vec:.0f}x")
+
+        m = 64
+        deltas = rng.integers(0, 2, (m, n_nodes, r)).astype(np.int32)
+        jd = jnp.asarray(deltas)
+        jref2 = jax.jit(ref.ebf_shadow_ref)
+        t_vec2 = _time(lambda: jax.block_until_ready(jref2(ja, jd, jr)))
+
+        def py_shadow():
+            cur = avail.copy()
+            fits = np.zeros(m, np.int32)
+            for k in range(m):
+                cur = cur + deltas[k]
+                fits[k] = int(np.all(cur >= req, axis=1).sum())
+            return fits
+        t_np2 = _time(py_shadow, reps=5)
+        rows[f"ebf_shadow/n{n_nodes}"] = {
+            "numpy_us": t_np2, "vector_us": t_vec2}
+        emit(f"kernels/ebf_shadow_n{n_nodes}", t_vec2,
+             f"numpy_us={t_np2:.0f}")
+    with open(os.path.join(out_dir, "bench_kernels.json"), "w") as fh:
+        json.dump(rows, fh, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,58 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,table2,...]
+
+Prints ``name,us_per_call,derived`` CSV lines (emit contract) and writes
+JSON + plots under results/bench/.  BENCH_SCALE scales workload sizes
+(1.0 default ~ minutes; 11 reproduces paper-scale MetaCentrum).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = ["table1", "table2", "fig_generator", "kernels", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all")
+    ap.add_argument("--out", default="results/bench")
+    args = ap.parse_args()
+    chosen = MODULES if args.only == "all" else args.only.split(",")
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in chosen:
+        t0 = time.time()
+        try:
+            if name == "table1":
+                from . import table1_scalability
+                table1_scalability.run(args.out)
+            elif name == "table2":
+                from . import table2_dispatchers
+                table2_dispatchers.run(args.out)
+            elif name == "fig_generator":
+                from . import fig_generator
+                fig_generator.run(args.out)
+            elif name == "kernels":
+                from . import bench_kernels
+                bench_kernels.run(args.out)
+            elif name == "roofline":
+                from . import roofline
+                roofline.run(args.out)
+            else:
+                raise KeyError(name)
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception as e:
+            failures.append(name)
+            print(f"# {name} FAILED: {e}", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Paper §7 case study — 8 dispatchers (4 schedulers × 2 allocators) on a
+Seth-like workload via the experimentation tool (Fig. 5), producing the
+comparative plots of Figs. 10-13.
+
+    PYTHONPATH=src python examples/dispatcher_comparison.py [n_jobs]
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core.dispatchers import (BestFit, EasyBackfilling, FirstFit,
+                                    FirstInFirstOut, LongestJobFirst,
+                                    ShortestJobFirst)
+from repro.experimentation import Experiment
+from benchmarks.common import SETH, seth_jobs
+
+
+def main():
+    n = int(sys.argv[1]) if len(sys.argv) > 1 else 4000
+    exp = Experiment("dispatcher_comparison", list(seth_jobs(n, seed=7)),
+                     SETH, output_dir="results")
+    exp.gen_dispatchers(
+        [FirstInFirstOut, ShortestJobFirst, LongestJobFirst, EasyBackfilling],
+        [FirstFit, BestFit])
+    results = exp.run_simulation()
+    table = {k: {"cpu_s": round(v["summaries"][0]["cpu_time_s"], 2),
+                 "dispatch_s": round(v["summaries"][0]["dispatch_time_s"], 2),
+                 "makespan": v["summaries"][0]["sim_end_time"]}
+             for k, v in results.items()}
+    print(json.dumps(table, indent=1))
+    print("plots under results/dispatcher_comparison/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""Sharded checkpointing with elastic restore (DESIGN.md §6).
+
+Layout: ``<dir>/step_<N>/`` holding one ``.npy`` per pytree leaf (path
+encoded in the filename) plus ``manifest.json`` (tree structure, shapes,
+dtypes, step, user metadata).  Leaves are written from host RAM after an
+explicit device->host copy, so saving is safe to run in a background
+thread (async checkpointing) while the next step executes on device.
+
+Elastic restore: leaves are stored *unsharded*; ``restore`` device_puts
+each leaf with the sharding derived from the **target** mesh + logical
+rules, so a checkpoint written on a 256-chip mesh restores onto 512 chips
+(or a single CPU) unchanged — checkpoint reshard is just a different
+NamedSharding at load.  A multi-host deployment would write per-shard
+files with the same manifest; the format keeps a ``shards`` field for it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+SEP = "__"
+
+
+def _flatten(tree, prefix=()) -> List[Tuple[Tuple[str, ...], Any]]:
+    out = []
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.extend(_flatten(tree[k], prefix + (str(k),)))
+    elif hasattr(tree, "_fields"):            # NamedTuple
+        for k in tree._fields:
+            out.extend(_flatten(getattr(tree, k), prefix + (k,)))
+    elif tree is None:
+        pass
+    else:
+        out.append((prefix, tree))
+    return out
+
+
+def _unflatten_into(skeleton, flat: Dict[str, np.ndarray], prefix=()):
+    if isinstance(skeleton, dict):
+        return {k: _unflatten_into(v, flat, prefix + (str(k),))
+                for k, v in skeleton.items()}
+    if hasattr(skeleton, "_fields"):
+        return type(skeleton)(*[
+            _unflatten_into(getattr(skeleton, k), flat, prefix + (k,))
+            for k in skeleton._fields])
+    if skeleton is None:
+        return None
+    key = SEP.join(prefix)
+    if key not in flat:
+        raise KeyError(f"checkpoint missing leaf {key}")
+    return flat[key]
+
+
+def save_checkpoint(directory: str, step: int, tree, metadata=None,
+                    _tmp_suffix: str = ".tmp") -> str:
+    """Atomic save: write to ``step_N.tmp`` then rename."""
+    final = os.path.join(directory, f"step_{step}")
+    tmp = final + _tmp_suffix
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": {}, "shards": 1,
+                "metadata": metadata or {}}
+    for path, leaf in _flatten(tree):
+        key = SEP.join(path)
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(os.path.join(tmp, key + ".npy"), arr)
+        manifest["leaves"][key] = {"shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def restore_checkpoint(directory: str, skeleton, step: Optional[int] = None,
+                       shardings=None):
+    """Restore into ``skeleton``'s structure.  ``shardings``: optional
+    matching pytree of NamedSharding for elastic placement."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as fh:
+        manifest = json.load(fh)
+    flat = {}
+    for key in manifest["leaves"]:
+        flat[key] = np.load(os.path.join(path, key + ".npy"))
+    tree = _unflatten_into(skeleton, flat)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda leaf, sh: jax.device_put(leaf, sh), tree, shardings)
+    else:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    return tree, manifest
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_", 1)[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+class Checkpointer:
+    """Async checkpoint manager with retention.
+
+    ``save`` snapshots to host synchronously (cheap vs a training step),
+    then writes files on a worker thread; ``wait`` joins before exit.
+    """
+
+    def __init__(self, directory: str, keep: int = 3) -> None:
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    def save(self, step: int, tree, metadata=None, blocking: bool = False):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            save_checkpoint(self.directory, step, host_tree, metadata)
+            self._gc()
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, skeleton, step=None, shardings=None):
+        self.wait()
+        return restore_checkpoint(self.directory, skeleton, step, shardings)
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_", 1)[1]) for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)

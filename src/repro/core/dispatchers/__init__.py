@@ -1,0 +1,30 @@
+from .base import AllocatorBase, SchedulerBase, Dispatcher
+from .allocators import FirstFit, BestFit
+from .schedulers import (
+    FirstInFirstOut,
+    ShortestJobFirst,
+    LongestJobFirst,
+    EasyBackfilling,
+    RejectAll,
+)
+from .advanced import (
+    PriorityAging,
+    WalltimeCorrectedEBF,
+    EnergyCappedScheduler,
+)
+
+__all__ = [
+    "AllocatorBase",
+    "SchedulerBase",
+    "Dispatcher",
+    "FirstFit",
+    "BestFit",
+    "FirstInFirstOut",
+    "ShortestJobFirst",
+    "LongestJobFirst",
+    "EasyBackfilling",
+    "RejectAll",
+    "PriorityAging",
+    "WalltimeCorrectedEBF",
+    "EnergyCappedScheduler",
+]

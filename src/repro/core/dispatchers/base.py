@@ -1,0 +1,111 @@
+"""Abstract dispatcher interfaces (paper Fig. 3: SchedulerBase / AllocatorBase).
+
+A *dispatcher* = scheduler ∘ allocator.  The scheduler decides WHICH queued
+jobs run next; the allocator decides WHERE (which nodes).  Both are
+customizable by subclassing — the paper's extension mechanism.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..job import Job
+from ..resources import ResourceManager
+
+# A dispatching decision: (job, node ids) pairs ready to start now,
+# plus optionally jobs to reject.
+Decision = Tuple[List[Tuple[Job, List[int]]], List[Job]]
+
+
+class AllocatorBase(abc.ABC):
+    """Chooses nodes for one job against a scratch availability matrix."""
+
+    name: str = "abstract"
+
+    @abc.abstractmethod
+    def find_nodes(
+        self,
+        request_vec: np.ndarray,
+        n_nodes: int,
+        avail: np.ndarray,
+        capacity: np.ndarray,
+    ) -> Optional[np.ndarray]:
+        """Return ``n_nodes`` node indices whose availability covers
+        ``request_vec``, or None if impossible.  MUST NOT modify ``avail``."""
+
+    def allocate(
+        self,
+        jobs: Sequence[Job],
+        avail: np.ndarray,
+        rm: ResourceManager,
+        stop_at_first_failure: bool = False,
+    ) -> List[Tuple[Job, Optional[List[int]]]]:
+        """Sequentially allocate ``jobs`` against ``avail`` (modified in
+        place for successful allocations so later jobs see reduced
+        availability)."""
+        out: List[Tuple[Job, Optional[List[int]]]] = []
+        for job in jobs:
+            vec = rm.request_vector(job)
+            nodes = self.find_nodes(vec, job.requested_nodes, avail, rm.capacity)
+            if nodes is None:
+                out.append((job, None))
+                if stop_at_first_failure:
+                    break
+            else:
+                avail[nodes] -= vec[None, :]
+                out.append((job, [int(n) for n in nodes]))
+        return out
+
+
+class SchedulerBase(abc.ABC):
+    """Produces the dispatching decision for one event point."""
+
+    name: str = "abstract"
+
+    def __init__(self, allocator: AllocatorBase) -> None:
+        self.allocator = allocator
+
+    @property
+    def dispatcher_name(self) -> str:
+        if self.allocator is None:
+            return self.name
+        return f"{self.name}-{self.allocator.name}"
+
+    @abc.abstractmethod
+    def schedule(self, now: int, queue: Sequence[Job], event_manager) -> Decision:
+        """Return ``(to_start, to_reject)``.
+
+        ``event_manager`` exposes the *dispatcher-visible* system status:
+        queued jobs, running jobs with **estimated** release times, and the
+        resource manager's availability — never true durations.
+        """
+
+    # helper shared by subclasses -------------------------------------
+    def _greedy(
+        self,
+        ordered: Sequence[Job],
+        event_manager,
+        blocking: bool = True,
+    ) -> Decision:
+        rm = event_manager.rm
+        avail = rm.available.copy()
+        res = self.allocator.allocate(
+            ordered, avail, rm, stop_at_first_failure=blocking)
+        to_start = [(j, n) for j, n in res if n is not None]
+        return to_start, []
+
+
+class Dispatcher:
+    """Convenience bundle (scheduler + allocator) used by the Simulator."""
+
+    def __init__(self, scheduler: SchedulerBase) -> None:
+        self.scheduler = scheduler
+
+    @property
+    def name(self) -> str:
+        return self.scheduler.dispatcher_name
+
+    def dispatch(self, now: int, event_manager) -> Decision:
+        return self.scheduler.schedule(now, event_manager.queue, event_manager)

@@ -1,0 +1,167 @@
+"""Schedulers: FIFO, SJF, LJF, EASY-backfilling, RejectAll (paper §3).
+
+The simple policies (FIFO/SJF/LJF) are *blocking*: they start jobs in
+priority order and stop at the first job that cannot be allocated — no
+queue-jumping.  EASY-backfilling (EBF, FIFO priority) additionally lets
+jobs jump the queue iff they cannot delay the head job's reservation,
+computed from walltime *estimates* (the dispatcher never sees true
+durations).  RejectAll is the paper's simulator-performance probe (§6.2):
+it rejects every submitted job, isolating the simulator core from
+dispatching cost.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from ..job import Job
+from .base import Decision, SchedulerBase
+
+
+class FirstInFirstOut(SchedulerBase):
+    name = "FIFO"
+
+    def schedule(self, now, queue, event_manager) -> Decision:
+        return self._greedy(list(queue), event_manager, blocking=True)
+
+
+class ShortestJobFirst(SchedulerBase):
+    name = "SJF"
+
+    def schedule(self, now, queue, event_manager) -> Decision:
+        ordered = sorted(queue, key=lambda j: (max(j.expected_duration, 1), j.queued_time))
+        return self._greedy(ordered, event_manager, blocking=True)
+
+
+class LongestJobFirst(SchedulerBase):
+    name = "LJF"
+
+    def schedule(self, now, queue, event_manager) -> Decision:
+        ordered = sorted(queue, key=lambda j: (-max(j.expected_duration, 1), j.queued_time))
+        return self._greedy(ordered, event_manager, blocking=True)
+
+
+class RejectAll(SchedulerBase):
+    name = "REJECT"
+
+    def __init__(self, allocator=None) -> None:  # allocator unused
+        super().__init__(allocator)
+
+    def schedule(self, now, queue, event_manager) -> Decision:
+        return [], list(queue)
+
+
+class EasyBackfilling(SchedulerBase):
+    """EASY backfilling with FIFO priority [Wong & Goscinski '07].
+
+    Per dispatch round:
+      1. start queue-head jobs greedily while they fit;
+      2. for the first blocked job (the *head*), compute the **shadow
+         time** — the earliest instant its request fits given the
+         estimated release times of running/just-started jobs — and
+         reserve its nodes at that instant;
+      3. backfill later queued jobs that fit *now* and either (a) finish
+         (by estimate) before the shadow time, or (b) use only resources
+         that remain *extra* after the head's reservation.
+    """
+
+    name = "EBF"
+
+    def schedule(self, now, queue, event_manager) -> Decision:
+        rm = event_manager.rm
+        avail = rm.available.copy()
+        q: List[Job] = list(queue)  # FIFO arrival order
+        to_start: List[Tuple[Job, List[int]]] = []
+
+        # --- 1. greedy head dispatch ----------------------------------
+        i = 0
+        while i < len(q):
+            job = q[i]
+            vec = rm.request_vector(job)
+            nodes = self.allocator.find_nodes(vec, job.requested_nodes, avail, rm.capacity)
+            if nodes is None:
+                break
+            avail[nodes] -= vec[None, :]
+            to_start.append((job, [int(n) for n in nodes]))
+            i += 1
+        if i >= len(q):
+            return to_start, []
+
+        head = q[i]
+        head_vec = rm.request_vector(head)
+
+        # --- 2. shadow time + reservation ------------------------------
+        releases = self._release_events(now, event_manager, to_start, rm)
+        shadow_time, shadow_avail = self._shadow(
+            avail, head_vec, head.requested_nodes, releases)
+        if shadow_time is None:
+            # head never fits even with everything released — should have
+            # been rejected at submission; be conservative: no backfilling.
+            return to_start, []
+        head_nodes = self.allocator.find_nodes(
+            head_vec, head.requested_nodes, shadow_avail, rm.capacity)
+        assert head_nodes is not None
+        extra = shadow_avail.copy()
+        extra[head_nodes] -= head_vec[None, :]
+
+        # --- 3. backfill ------------------------------------------------
+        for job in q[i + 1:]:
+            vec = rm.request_vector(job)
+            est_end = now + max(job.expected_duration, 1)
+            if est_end <= shadow_time:
+                nodes = self.allocator.find_nodes(
+                    vec, job.requested_nodes, avail, rm.capacity)
+                if nodes is None:
+                    continue
+                avail[nodes] -= vec[None, :]
+            else:
+                # must not touch the head's reservation: fit within
+                # min(available now, extra at shadow)
+                combined = np.minimum(avail, extra)
+                nodes = self.allocator.find_nodes(
+                    vec, job.requested_nodes, combined, rm.capacity)
+                if nodes is None:
+                    continue
+                avail[nodes] -= vec[None, :]
+                extra[nodes] -= vec[None, :]
+            to_start.append((job, [int(n) for n in nodes]))
+        return to_start, []
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _release_events(now, event_manager, to_start, rm):
+        """(est_release, node_idx, per_node_vec) for running + just-started
+        jobs, using walltime estimates only."""
+        releases = []
+        for est, rjob in event_manager.running_release_times():
+            idx = np.asarray(rjob.assigned_nodes, dtype=np.int64)
+            releases.append((int(est), idx, rm.request_vector(rjob)))
+        for job, nodes in to_start:
+            est = now + max(job.expected_duration, 1)
+            releases.append((int(est), np.asarray(nodes, dtype=np.int64),
+                             rm.request_vector(job)))
+        releases.sort(key=lambda r: r[0])
+        return releases
+
+    @staticmethod
+    def _shadow(avail, head_vec, n_nodes, releases):
+        """Earliest estimated time the head fits; availability then.
+
+        Walks the sorted release events, applying all releases sharing a
+        timestamp before testing the fit (tie-correct prefix scan).  The
+        Pallas twin of this loop lives in ``kernels/ebf_shadow.py``.
+        """
+        cur = avail.copy()
+        k = 0
+        n = len(releases)
+        while k < n:
+            t = releases[k][0]
+            while k < n and releases[k][0] == t:
+                _, idx, vec = releases[k]
+                cur[idx] += vec[None, :]
+                k += 1
+            fit = np.all(cur >= head_vec[None, :], axis=1)
+            if int(fit.sum()) >= n_nodes:
+                return t, cur
+        return None, None

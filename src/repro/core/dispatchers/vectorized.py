@@ -1,0 +1,75 @@
+"""Vectorized (JAX/Pallas) dispatch engine — the TPU-native twin of the
+numpy allocators/schedulers (DESIGN.md §2).
+
+Semantics are bit-identical to ``allocators.py`` / ``schedulers.py`` (the
+tests assert trace-for-trace equality of dispatching decisions); only the
+inner loops run as tensor programs through ``repro.kernels.ops``:
+
+* FF/BF node selection  -> ``alloc_score`` kernel (fit mask + load score)
+* EBF shadow time       -> ``ebf_shadow`` kernel (release prefix scan)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from ...kernels import ops
+from .base import AllocatorBase
+from .schedulers import EasyBackfilling
+
+
+class VectorizedAllocator(AllocatorBase):
+    """First-Fit or Best-Fit backed by the ``alloc_score`` kernel."""
+
+    def __init__(self, policy: str = "FF") -> None:
+        if policy not in ("FF", "BF"):
+            raise ValueError(policy)
+        self.policy = policy
+        self.name = f"v{policy}"
+
+    def find_nodes(self, request_vec, n_nodes, avail, capacity) -> Optional[np.ndarray]:
+        fit, score = ops.alloc_score(
+            np.ascontiguousarray(avail, dtype=np.int32),
+            np.ascontiguousarray(capacity, dtype=np.int32),
+            np.ascontiguousarray(request_vec, dtype=np.int32))
+        fit = np.asarray(fit, dtype=bool)
+        if int(fit.sum()) < n_nodes:
+            return None
+        if self.policy == "FF":
+            return np.nonzero(fit)[0][:n_nodes]
+        score = np.asarray(score)
+        order = np.argsort(-score, kind="stable")
+        fitting = order[fit[order]]
+        return fitting[:n_nodes]
+
+
+class VectorizedEasyBackfilling(EasyBackfilling):
+    """EBF whose shadow-time prefix scan runs in the ``ebf_shadow`` kernel."""
+
+    name = "vEBF"
+
+    @staticmethod
+    def _shadow(avail, head_vec, n_nodes, releases):
+        if not releases:
+            return None, None
+        # group release events by distinct estimated time -> deltas[M, N, R]
+        times = []
+        deltas = []
+        cur_t = None
+        for t, idx, vec in releases:
+            if t != cur_t:
+                times.append(t)
+                deltas.append(np.zeros_like(avail))
+                cur_t = t
+            deltas[-1][idx] += vec[None, :]
+        deltas = np.stack(deltas).astype(np.int32)          # [M, N, R]
+        fits = np.asarray(ops.ebf_shadow_fits(
+            np.ascontiguousarray(avail, dtype=np.int32), deltas,
+            np.ascontiguousarray(head_vec, dtype=np.int32)))
+        hit = np.nonzero(fits >= n_nodes)[0]
+        if hit.shape[0] == 0:
+            return None, None
+        m = int(hit[0])
+        shadow_avail = avail + deltas[: m + 1].sum(axis=0)
+        return times[m], shadow_avail

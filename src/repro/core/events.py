@@ -1,0 +1,149 @@
+"""Event manager — the discrete-event core of the simulator (paper §3).
+
+Drives jobs through LOADED -> QUEUED -> RUNNING -> COMPLETED using three
+event kinds: submission (T_sb, from the workload), start (T_st, decided by
+the dispatcher) and completion (T_c = T_st + duration, known only here —
+never exposed to the dispatcher).
+
+Scalability design (paper's headline feature): jobs are pulled
+*incrementally* from the workload source — only jobs whose submission time
+falls inside a sliding look-ahead window are materialized — and completed
+jobs are dropped from memory after their record is written.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
+
+from .job import Job, JobState
+from .resources import ResourceManager
+
+
+class EventManager:
+    """Owns simulation time, job states, and the event queues."""
+
+    def __init__(
+        self,
+        job_source: Iterator[Job],
+        resource_manager: ResourceManager,
+        lookahead_jobs: int = 8192,
+        on_complete: Optional[Callable[[Job], None]] = None,
+    ) -> None:
+        self.rm = resource_manager
+        self._source = iter(job_source)
+        self._lookahead = max(1, lookahead_jobs)
+        self._on_complete = on_complete
+
+        self.current_time: int = 0
+        self.loaded: List[Tuple[int, int, Job]] = []      # heap of (T_sb, seq, job)
+        self.queue: List[Job] = []                        # FIFO by arrival
+        self.running: Dict[str, Job] = {}
+        self._completions: List[Tuple[int, str]] = []     # heap of (T_c, id)
+        self._seq = 0
+        self._exhausted = False
+        # counters (memory-light aggregates; full records go to the output)
+        self.n_submitted = 0
+        self.n_completed = 0
+        self.n_rejected = 0
+        self._refill()
+
+    # ------------------------------------------------------------------ load
+    def _refill(self) -> None:
+        """Incremental job loading: top the LOADED buffer up to the window."""
+        while not self._exhausted and len(self.loaded) < self._lookahead:
+            try:
+                job = next(self._source)
+            except StopIteration:
+                self._exhausted = True
+                return
+            job.state = JobState.LOADED
+            heapq.heappush(self.loaded, (job.submission_time, self._seq, job))
+            self._seq += 1
+
+    # ------------------------------------------------------------------ time
+    def next_event_time(self) -> Optional[int]:
+        cands = []
+        if self.loaded:
+            cands.append(self.loaded[0][0])
+        if self._completions:
+            cands.append(self._completions[0][0])
+        return min(cands) if cands else None
+
+    def has_events(self) -> bool:
+        return bool(self.loaded or self._completions or self.queue)
+
+    # ------------------------------------------------------------------ step
+    def advance_to(self, t: int) -> Tuple[List[Job], List[Job]]:
+        """Move simulation time to ``t``; process completions then
+        submissions scheduled at (or before) ``t``.
+
+        Returns ``(completed, submitted)`` jobs at this event point.
+        """
+        assert t >= self.current_time, "time must be monotone"
+        self.current_time = t
+
+        completed: List[Job] = []
+        while self._completions and self._completions[0][0] <= t:
+            _, jid = heapq.heappop(self._completions)
+            job = self.running.pop(jid)
+            job.state = JobState.COMPLETED
+            self.rm.release(job)
+            self.n_completed += 1
+            completed.append(job)
+            if self._on_complete is not None:
+                self._on_complete(job)
+
+        submitted: List[Job] = []
+        while self.loaded and self.loaded[0][0] <= t:
+            _, _, job = heapq.heappop(self.loaded)
+            job.state = JobState.QUEUED
+            job.queued_time = t
+            self.queue.append(job)
+            self.n_submitted += 1
+            submitted.append(job)
+            self._refill()
+        return completed, submitted
+
+    # ------------------------------------------------------------------ start
+    def start_job(self, job: Job, nodes: List[int]) -> None:
+        """Execute a dispatching decision: allocate + schedule completion."""
+        t = self.current_time
+        self.rm.allocate(job, nodes)
+        job.state = JobState.RUNNING
+        job.start_time = t
+        job.end_time = t + job.duration
+        job.assigned_nodes = list(nodes)
+        self.queue.remove(job)
+        self.running[job.id] = job
+        heapq.heappush(self._completions, (job.end_time, job.id))
+
+    def reject_job(self, job: Job) -> None:
+        job.state = JobState.REJECTED
+        self.queue.remove(job)
+        self.n_rejected += 1
+        if self._on_complete is not None:
+            self._on_complete(job)
+
+    # ------------------------------------------------------------------ views
+    def system_status(self) -> Dict[str, object]:
+        """Current system status exposed to dispatchers & the monitor tool."""
+        return {
+            "time": self.current_time,
+            "queued": len(self.queue),
+            "running": len(self.running),
+            "completed": self.n_completed,
+            "rejected": self.n_rejected,
+            "submitted": self.n_submitted,
+            "resources": self.rm.snapshot(),
+        }
+
+    def running_release_times(self) -> List[Tuple[int, Job]]:
+        """(estimated release time, job) for running jobs — dispatcher view:
+        uses walltime estimates, never true durations."""
+        out = []
+        for job in self.running.values():
+            est = job.start_time + max(job.expected_duration, 1)
+            # a job may overrun its estimate; from 'now' it releases no
+            # earlier than the next tick
+            out.append((max(est, self.current_time + 1), job))
+        return out

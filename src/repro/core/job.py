@@ -1,0 +1,147 @@
+"""Job model for the AccaSim-style workload management simulator.
+
+A job follows the paper's life-cycle::
+
+    LOADED -> QUEUED -> RUNNING -> COMPLETED
+                  \\-> REJECTED          (rejecting dispatcher / invalid)
+
+The dispatcher never sees ``duration`` (the true runtime) — only
+``expected_duration`` (the user-supplied walltime estimate), mirroring the
+paper's separation between the event manager (which knows T_c) and the
+dispatcher (which only knows estimates).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+class JobState(enum.IntEnum):
+    LOADED = 0
+    QUEUED = 1
+    RUNNING = 2
+    COMPLETED = 3
+    REJECTED = 4
+
+
+@dataclass
+class Job:
+    """A synthetic job created by the job factory from a workload record."""
+
+    id: str
+    user_id: int
+    submission_time: int                      # T_sb  (seconds)
+    duration: int                             # true runtime, hidden from dispatcher
+    expected_duration: int                    # walltime estimate (visible)
+    requested_nodes: int                      # number of distinct nodes
+    requested_resources: Dict[str, int]       # per-node request, e.g. {"core": 2, "mem": 512}
+
+    # --- extended attributes (job factory may attach more) ---
+    attrs: Dict[str, object] = field(default_factory=dict)
+
+    # --- simulation state (managed by the event manager) ---
+    state: JobState = JobState.LOADED
+    queued_time: Optional[int] = None
+    start_time: Optional[int] = None          # T_st
+    end_time: Optional[int] = None            # T_c
+    assigned_nodes: List[int] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        if self.duration < 0:
+            raise ValueError(f"job {self.id}: negative duration {self.duration}")
+        if self.requested_nodes <= 0:
+            raise ValueError(f"job {self.id}: must request >= 1 node")
+        if self.expected_duration < 0:
+            self.expected_duration = self.duration
+
+    # ----- convenience -------------------------------------------------
+    @property
+    def completion_time(self) -> Optional[int]:
+        return self.end_time
+
+    def expected_end(self, now: int) -> int:
+        """Estimated completion if started at ``now`` (dispatcher view)."""
+        return now + max(self.expected_duration, 1)
+
+    @property
+    def waiting_time(self) -> Optional[int]:
+        if self.start_time is None:
+            return None
+        return self.start_time - self.submission_time
+
+    @property
+    def slowdown(self) -> Optional[float]:
+        """Paper §7.2: slowdown_j = (T_w + T_r) / T_r."""
+        if self.start_time is None:
+            return None
+        run = max(self.duration, 1)
+        return (self.waiting_time + run) / run
+
+    def to_record(self) -> Dict[str, object]:
+        """Flat record for the simulator output file (first output type)."""
+        return {
+            "id": self.id,
+            "user": self.user_id,
+            "submit": self.submission_time,
+            "start": self.start_time,
+            "end": self.end_time,
+            "duration": self.duration,
+            "expected_duration": self.expected_duration,
+            "nodes": self.requested_nodes,
+            "resources": dict(self.requested_resources),
+            "assigned": list(self.assigned_nodes),
+            "waiting": self.waiting_time,
+            "slowdown": self.slowdown,
+            "state": self.state.name,
+        }
+
+
+class JobFactory:
+    """Creates :class:`Job` objects from parsed workload records.
+
+    The default mapping consumes records produced by the SWF reader
+    (``repro.workloads.swf``). ``extra_attributes`` lets users attach
+    additional per-job data (e.g. power estimates) as the paper's job
+    factory does.
+    """
+
+    def __init__(self, resource_mapper=None, extra_attributes=None) -> None:
+        self._mapper = resource_mapper
+        self._extra = extra_attributes or {}
+
+    def from_record(self, rec: Dict[str, object]) -> Job:
+        if self._mapper is not None:
+            nodes, per_node = self._mapper(rec)
+        else:
+            nodes = int(rec.get("requested_nodes", 1)) or 1
+            per_node = dict(rec.get("requested_resources", {"core": 1}))
+        job = Job(
+            id=str(rec["id"]),
+            user_id=int(rec.get("user", -1)),
+            submission_time=int(rec["submit"]),
+            duration=max(int(rec["duration"]), 0),
+            expected_duration=int(rec.get("expected_duration", rec["duration"])),
+            requested_nodes=nodes,
+            requested_resources=per_node,
+        )
+        for key, fn in self._extra.items():
+            job.attrs[key] = fn(rec)
+        return job
+
+
+def swf_resource_mapper(cores_per_node: int, mem_per_node: int = 0):
+    """Map an SWF record (total processors + total memory) onto the
+    node-spanning request model: ``requested_nodes`` nodes, each with an
+    identical per-node resource vector (AccaSim's representation)."""
+
+    def mapper(rec: Dict[str, object]):
+        procs = max(int(rec.get("requested_processors", 1)), 1)
+        mem = max(int(rec.get("requested_memory", 0)), 0)
+        nodes = max(1, -(-procs // cores_per_node))  # ceil division
+        per_node = {"core": -(-procs // nodes)}
+        if mem_per_node > 0:
+            per_node["mem"] = min(mem_per_node, -(-mem // nodes)) if mem else 0
+        return nodes, per_node
+
+    return mapper

@@ -1,0 +1,56 @@
+"""Monitoring tools (paper §3 "Tools"): system status + utilization.
+
+``SystemStatus`` answers point-in-time queries (queued/running/completed,
+resource availability, elapsed CPU time).  ``UtilizationMonitor``
+accumulates a time series of per-resource utilization — the headless
+equivalent of the paper's GUI system-visualization component (snapshots
+are rendered by the PlotFactory with the Agg backend).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from ..utils import rss_mb
+
+
+class SystemStatus:
+    def __init__(self) -> None:
+        self._t0 = time.process_time()
+
+    def query(self, event_manager) -> Dict[str, object]:
+        s = event_manager.system_status()
+        s["cpu_time_s"] = time.process_time() - self._t0
+        s["rss_mb"] = rss_mb()
+        return s
+
+
+class UtilizationMonitor:
+    """Accumulates (sim_time, utilization per resource type, queue, running)."""
+
+    def __init__(self, sample_every: int = 1) -> None:
+        self.sample_every = max(1, sample_every)
+        self.times: List[int] = []
+        self.util: Dict[str, List[float]] = {}
+        self.queued: List[int] = []
+        self.running: List[int] = []
+        self._n = 0
+
+    def observe(self, event_manager) -> None:
+        self._n += 1
+        if self._n % self.sample_every:
+            return
+        em = event_manager
+        self.times.append(em.current_time)
+        for rt, u in em.rm.utilization().items():
+            self.util.setdefault(rt, []).append(u)
+        self.queued.append(len(em.queue))
+        self.running.append(len(em.running))
+
+    def as_dict(self) -> Dict[str, object]:
+        return {
+            "times": self.times,
+            "utilization": self.util,
+            "queued": self.queued,
+            "running": self.running,
+        }

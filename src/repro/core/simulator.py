@@ -1,0 +1,211 @@
+"""The Simulator — AccaSim's top-level class (paper Fig. 4).
+
+    sim = Simulator('workload.swf', 'sys_config.json', dispatcher)
+    output_file = sim.start_simulation()
+
+Design notes mirroring the paper:
+  * discrete event loop over submission/completion times (never ticks
+    through empty seconds);
+  * incremental job loading through the reader (LOADED window) and removal
+    of completed jobs — memory stays ~flat w.r.t. workload size;
+  * two output streams: per-job dispatching records, and per-event-point
+    simulator performance records (CPU time split dispatch vs other, RSS);
+  * optional monitors + additional-data hooks.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Iterable, Iterator, List, Optional, Union
+
+try:  # fast JSON if available (offline container ships orjson)
+    import orjson as _json
+
+    def _dumps(obj) -> bytes:
+        return _json.dumps(obj)
+except Exception:  # pragma: no cover
+    def _dumps(obj) -> bytes:
+        return json.dumps(obj).encode()
+
+from ..utils import rss_mb
+from .additional_data import AdditionalData, NodeFailureModel
+from .dispatchers.base import Dispatcher, SchedulerBase
+from .events import EventManager
+from .job import Job, JobFactory, swf_resource_mapper
+from .monitors import SystemStatus, UtilizationMonitor
+from .resources import ResourceManager
+
+
+class Simulator:
+    def __init__(
+        self,
+        workload: Union[str, Iterable[Job]],
+        sys_config: Union[str, Dict],
+        dispatcher: Union[Dispatcher, SchedulerBase],
+        job_factory: Optional[JobFactory] = None,
+        lookahead_jobs: int = 8192,
+        output_dir: str = "results",
+        name: Optional[str] = None,
+    ) -> None:
+        if isinstance(sys_config, str):
+            with open(sys_config) as fh:
+                sys_config = json.load(fh)
+        self.sys_config = sys_config
+        self.rm = ResourceManager(sys_config)
+        if isinstance(dispatcher, SchedulerBase):
+            dispatcher = Dispatcher(dispatcher)
+        self.dispatcher = dispatcher
+        self._workload = workload
+        self._lookahead = lookahead_jobs
+        self.output_dir = output_dir
+        self.name = name or self.dispatcher.name
+        if job_factory is None:
+            # default: SWF totals -> node-spanning request, sized by the
+            # densest node group of this system
+            cores = int(max(self.rm.capacity[:, self.rm.resource_types.index("core")]))\
+                if "core" in self.rm.resource_types else 1
+            mem_i = self.rm.resource_types.index("mem") if "mem" in self.rm.resource_types else None
+            mem = int(max(self.rm.capacity[:, mem_i])) if mem_i is not None else 0
+            job_factory = JobFactory(swf_resource_mapper(cores, mem))
+        self.job_factory = job_factory
+
+    # ------------------------------------------------------------------
+    def _job_iterator(self) -> Iterator[Job]:
+        wl = self._workload
+        if isinstance(wl, str):
+            from ..workloads.swf import SWFReader
+
+            reader = SWFReader(wl)
+            for rec in reader:
+                yield self.job_factory.from_record(rec)
+        else:
+            for item in wl:
+                if isinstance(item, Job):
+                    yield item
+                else:
+                    yield self.job_factory.from_record(item)
+
+    # ------------------------------------------------------------------
+    def start_simulation(
+        self,
+        system_status: bool = False,
+        system_utilization: bool = False,
+        additional_data: Optional[List[AdditionalData]] = None,
+        bench_sample_every: int = 1,
+        max_events: Optional[int] = None,
+        write_output: bool = True,
+    ) -> str:
+        os.makedirs(self.output_dir, exist_ok=True)
+        out_path = os.path.join(self.output_dir, f"{self.name}-output.jsonl")
+        bench_path = os.path.join(self.output_dir, f"{self.name}-bench.jsonl")
+        out_fh = open(out_path, "wb") if write_output else None
+        bench_fh = open(bench_path, "wb") if write_output else None
+
+        sched = self.dispatcher.scheduler
+        observe = getattr(sched, "observe_completion", None)
+
+        def on_complete(job: Job) -> None:
+            if observe is not None and job.state.name == "COMPLETED":
+                observe(job)         # data-driven dispatchers learn online
+            if out_fh is not None:
+                out_fh.write(_dumps(job.to_record()) + b"\n")
+
+        em = EventManager(
+            self._job_iterator(), self.rm,
+            lookahead_jobs=self._lookahead, on_complete=on_complete)
+        self.event_manager = em
+
+        status = SystemStatus() if system_status else None
+        util = UtilizationMonitor() if system_utilization else None
+        self.utilization_monitor = util
+        adata = additional_data or []
+        for ad in adata:
+            if isinstance(ad, NodeFailureModel):
+                ad.bind(self.rm)
+
+        t_start = time.process_time()
+        wall_start = time.time()
+        dispatch_total = 0.0
+        n_events = 0
+        mem_samples: List[float] = []
+
+        while em.has_events():
+            t = em.next_event_time()
+            # additional-data sources (failures, power traces) contribute
+            # wake-up times between job events
+            for ad in adata:
+                ad_t = ad.next_event_time()
+                if ad_t is not None and ad_t > em.current_time and \
+                        (t is None or ad_t < t) and (em.running or em.queue):
+                    t = ad_t
+            if t is None:
+                if em.queue:
+                    # queued jobs remain but no event can free resources and
+                    # no submissions remain -> they can never start (they
+                    # were capacity-checked, so this means a livelock from
+                    # failed nodes); reject to terminate cleanly.
+                    for job in list(em.queue):
+                        em.reject_job(job)
+                break
+            em.advance_to(t)
+
+            ad_view = {}
+            for ad in adata:
+                ad_view[ad.name] = ad.update(em)
+            self.additional_view = ad_view
+
+            # capacity sanity: reject jobs that can never fit this system
+            for job in list(em.queue):
+                if not self.rm.fits_system(job):
+                    em.reject_job(job)
+
+            d0 = time.perf_counter()
+            if em.queue:
+                to_start, to_reject = self.dispatcher.dispatch(t, em)
+                for job, nodes in to_start:
+                    em.start_job(job, nodes)
+                for job in to_reject:
+                    em.reject_job(job)
+            dt_dispatch = time.perf_counter() - d0
+            dispatch_total += dt_dispatch
+
+            if status is not None:
+                self.last_status = status.query(em)
+            if util is not None:
+                util.observe(em)
+
+            n_events += 1
+            if n_events % max(bench_sample_every, 1) == 0:
+                rss = rss_mb()
+                mem_samples.append(rss)
+                if bench_fh is not None:
+                    bench_fh.write(_dumps({
+                        "t": t,
+                        "queue": len(em.queue),
+                        "running": len(em.running),
+                        "dispatch_s": dt_dispatch,
+                        "rss_mb": rss,
+                    }) + b"\n")
+            if max_events is not None and n_events >= max_events:
+                break
+
+        cpu_total = time.process_time() - t_start
+        self.summary = {
+            "dispatcher": self.dispatcher.name,
+            "events": n_events,
+            "submitted": em.n_submitted,
+            "completed": em.n_completed,
+            "rejected": em.n_rejected,
+            "cpu_time_s": cpu_total,
+            "wall_time_s": time.time() - wall_start,
+            "dispatch_time_s": dispatch_total,
+            "sim_end_time": em.current_time,
+            "mem_avg_mb": (sum(mem_samples) / len(mem_samples)) if mem_samples else rss_mb(),
+            "mem_max_mb": max(mem_samples) if mem_samples else rss_mb(),
+        }
+        if write_output:
+            out_fh.close()
+            bench_fh.write(_dumps({"summary": self.summary}) + b"\n")
+            bench_fh.close()
+        return out_path

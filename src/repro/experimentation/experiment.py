@@ -1,0 +1,81 @@
+"""Experiment automation (paper Fig. 5).
+
+    exp = Experiment('my_experiment', workload, sys_cfg)
+    exp.gen_dispatchers([FirstInFirstOut, ShortestJobFirst], [FirstFit])
+    exp.run_simulation()      # simulates every dispatcher + all plots
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Type
+
+from ..core.dispatchers.base import AllocatorBase, SchedulerBase
+from ..core.simulator import Simulator
+from .plot_factory import (DECISION_PLOTS, PERFORMANCE_PLOTS, PlotFactory)
+
+
+class Experiment:
+    def __init__(self, name: str, workload, sys_config,
+                 output_dir: str = "results", repeats: int = 1,
+                 **sim_kwargs) -> None:
+        self.name = name
+        self.workload = workload
+        self.sys_config = sys_config
+        self.output_dir = os.path.join(output_dir, name)
+        self.repeats = max(1, repeats)
+        self.sim_kwargs = sim_kwargs
+        self.dispatchers: List[SchedulerBase] = []
+        self.results: Dict[str, Dict] = {}
+
+    # ------------------------------------------------------------------
+    def gen_dispatchers(self, schedulers: Sequence[Type[SchedulerBase]],
+                        allocators: Sequence[Type[AllocatorBase]]) -> None:
+        """Cross product of scheduler × allocator classes (paper Fig. 5)."""
+        for s_cls in schedulers:
+            for a_cls in allocators:
+                self.add_dispatcher(s_cls(a_cls()))
+
+    def add_dispatcher(self, scheduler: SchedulerBase) -> None:
+        self.dispatchers.append(scheduler)
+
+    # ------------------------------------------------------------------
+    def run_simulation(self, produce_plots: bool = True,
+                       start_kwargs: Optional[Dict] = None) -> Dict[str, Dict]:
+        os.makedirs(self.output_dir, exist_ok=True)
+        start_kwargs = start_kwargs or {}
+        outputs, benches, labels = [], [], []
+        for sched in self.dispatchers:
+            name = sched.dispatcher_name
+            summaries = []
+            out_path = None
+            for rep in range(self.repeats):
+                sim = Simulator(self.workload, self.sys_config, sched,
+                                output_dir=self.output_dir,
+                                name=f"{name}-r{rep}" if self.repeats > 1 else name,
+                                **self.sim_kwargs)
+                out_path = sim.start_simulation(**start_kwargs)
+                summaries.append(sim.summary)
+            self.results[name] = {
+                "summaries": summaries,
+                "output": out_path,
+                "bench": out_path.replace("-output.jsonl", "-bench.jsonl"),
+            }
+            outputs.append(out_path)
+            benches.append(self.results[name]["bench"])
+            labels.append(name)
+
+        with open(os.path.join(self.output_dir, "summaries.json"), "w") as fh:
+            json.dump({k: v["summaries"] for k, v in self.results.items()},
+                      fh, indent=1)
+
+        if produce_plots:
+            pf = PlotFactory("decision", self.sys_config)
+            pf.set_files(outputs, labels, benches)
+            for kind in DECISION_PLOTS:
+                pf.produce_plot(kind)
+            pf2 = PlotFactory("performance", self.sys_config)
+            pf2.set_files(outputs, labels, benches)
+            for kind in PERFORMANCE_PLOTS:
+                pf2.produce_plot(kind)
+        return self.results

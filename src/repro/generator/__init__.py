@@ -1,0 +1,3 @@
+from .workload_generator import WorkloadGenerator
+
+__all__ = ["WorkloadGenerator"]

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: per-node fit mask + Best-Fit load score.
+
+This is the inner loop of the paper's allocators (FF/BF, §3): for one
+job's per-node request, decide for every node whether it fits and how
+loaded the node is.  AccaSim does this with a Python loop over nodes; the
+TPU-native formulation tiles the node axis into VMEM blocks (lane dim,
+128-aligned) with resource types on the sublane axis, and evaluates the
+whole block with VPU compare/reduce ops.
+
+Layout: inputs are transposed to ``[R, N]`` so the large node axis is the
+TPU lane dimension; N is padded to the block size with sentinel values
+(avail = -1 never fits, capacity = 1 avoids div-by-zero).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 512
+
+
+def _alloc_score_kernel(req_ref, avail_ref, cap_ref, fit_ref, score_ref):
+    a = avail_ref[...]                      # [R, BN] int32
+    r = req_ref[...]                        # [R, 1]  int32
+    c = cap_ref[...]                        # [R, BN] int32
+    fit = jnp.all(a >= r, axis=0, keepdims=True)              # [1, BN]
+    used = (c - a).astype(jnp.float32) / jnp.maximum(c, 1).astype(jnp.float32)
+    score = jnp.sum(used, axis=0, keepdims=True)              # [1, BN]
+    fit_ref[...] = fit.astype(jnp.int32)
+    score_ref[...] = score
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def alloc_score_pallas(
+    avail: jax.Array,          # int32[N, R]
+    capacity: jax.Array,       # int32[N, R]
+    req: jax.Array,            # int32[R]
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = False,
+):
+    """Returns (fit int32[N], score f32[N]) — see ``ref.alloc_score_ref``."""
+    n, r = avail.shape
+    n_pad = -(-n // block_n) * block_n
+    avail_t = jnp.full((r, n_pad), -1, dtype=jnp.int32)
+    cap_t = jnp.ones((r, n_pad), dtype=jnp.int32)
+    avail_t = avail_t.at[:, :n].set(avail.astype(jnp.int32).T)
+    cap_t = cap_t.at[:, :n].set(capacity.astype(jnp.int32).T)
+    req2 = req.astype(jnp.int32).reshape(r, 1)
+
+    grid = (n_pad // block_n,)
+    fit, score = pl.pallas_call(
+        _alloc_score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r, 1), lambda i: (0, 0)),
+            pl.BlockSpec((r, block_n), lambda i: (0, i)),
+            pl.BlockSpec((r, block_n), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n_pad), jnp.int32),
+            jax.ShapeDtypeStruct((1, n_pad), jnp.float32),
+        ],
+        interpret=interpret,
+        name="alloc_score",
+    )(req2, avail_t, cap_t)
+    return fit[0, :n], score[0, :n]

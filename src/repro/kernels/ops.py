@@ -1,0 +1,105 @@
+"""Public jit'd wrappers for the kernel layer.
+
+Dispatch policy: the Pallas path runs on real TPU (``interpret=False``) or
+under forced interpretation (tests / CPU validation).  Lowering for a
+non-TPU backend — e.g. the CPU-hosted multi-pod dry-run — falls back to the
+``ref.py`` oracles, whose HLO is what XLA:TPU would see anyway for these
+memory-bound ops.  Set ``REPRO_KERNELS=interpret|ref|tpu`` to override.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .alloc_score import alloc_score_pallas
+from .ebf_shadow import ebf_shadow_pallas
+from .selective_scan import selective_scan_pallas
+
+
+def _mode() -> str:
+    forced = os.environ.get("REPRO_KERNELS")
+    if forced in ("interpret", "ref", "tpu", "stub"):
+        return forced
+    return "tpu" if jax.default_backend() == "tpu" else "ref"
+
+
+def _scan_traffic_stub(u, delta, A, B, C, D):
+    """HBM-traffic-equivalent stand-in for the Pallas selective-scan.
+
+    Used ONLY for dry-run lowering (REPRO_KERNELS=stub): one streaming
+    pass over u/delta/B/C -> y, mirroring the kernel's BlockSpec-implied
+    HBM traffic (the SSM state lives in VMEM scratch and never touches
+    HBM — the whole point of the kernel, DESIGN.md §2).  The recurrence's
+    FLOPs (~Di·S·10 per token, <1% of the block matmuls) are intentionally
+    approximated; numerics are NOT equivalent — never use outside lowering.
+    """
+    import jax.numpy as jnp
+    mix = (B * C).sum(-1)[..., None]                         # [Bt, L, 1]
+    y = u * jax.nn.silu(delta) + u * mix + D[None, None, :]
+    h_last = jnp.zeros((u.shape[0], u.shape[2], A.shape[1]),
+                       jnp.float32) + A.sum() * 0.0
+    return y.astype(jnp.float32), h_last
+
+
+def alloc_score(avail, capacity, req):
+    """(fit int32[N], score f32[N]) for one job request (FF/BF inner loop)."""
+    mode = _mode()
+    if mode == "ref":
+        return jax.jit(ref.alloc_score_ref)(avail, capacity, req)
+    return alloc_score_pallas(avail, capacity, req,
+                              interpret=(mode == "interpret"))
+
+
+def ebf_shadow_fits(avail, deltas, req):
+    """fits int32[M]: fitting-node count per release prefix (EBF shadow)."""
+    mode = _mode()
+    if mode == "ref":
+        return jax.jit(ref.ebf_shadow_ref)(avail, deltas, req)
+    return ebf_shadow_pallas(avail, deltas, req,
+                             interpret=(mode == "interpret"))
+
+
+def selective_scan(u, delta, A, B, C, D, chunk: int = 128):
+    """Mamba-1 selective scan: (y, h_last)."""
+    mode = _mode()
+    if mode == "stub":
+        return _scan_traffic_stub(u, delta, A, B, C, D)
+    if mode == "ref":
+        return ref.selective_scan_ref(u, delta, A, B, C, D)
+    L, di = u.shape[1], u.shape[2]
+    chunk = min(chunk, L)
+    while chunk > 4 and L % chunk:
+        chunk //= 2
+    block_d = 512
+    while block_d > 4 and di % block_d:
+        block_d //= 2
+    if L % chunk or di % block_d:      # irregular shapes: oracle path
+        return ref.selective_scan_ref(u, delta, A, B, C, D)
+    return _scan_with_ref_grad(u, delta, A, B, C, D, chunk, block_d,
+                               interpret=(mode == "interpret"))
+
+
+def _scan_with_ref_grad(u, delta, A, B, C, D, chunk, block_d, interpret):
+    """Pallas forward + ref-oracle backward (pallas_call has no built-in
+    AD; a production deployment would pair this with a handwritten
+    backward kernel — the ref VJP is the correctness-preserving default)."""
+
+    @jax.custom_vjp
+    def f(u, delta, A, B, C, D):
+        return selective_scan_pallas(u, delta, A, B, C, D, chunk=chunk,
+                                     block_d=block_d, interpret=interpret)
+
+    def fwd(u, delta, A, B, C, D):
+        out = selective_scan_pallas(u, delta, A, B, C, D, chunk=chunk,
+                                    block_d=block_d, interpret=interpret)
+        return out, (u, delta, A, B, C, D)
+
+    def bwd(res, ct):
+        _, vjp = jax.vjp(ref.selective_scan_ref, *res)
+        return vjp(ct)
+
+    f.defvjp(fwd, bwd)
+    return f(u, delta, A, B, C, D)

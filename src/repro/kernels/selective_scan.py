@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: chunked Mamba-1 selective scan (diagonal SSM).
+
+The CUDA selective-scan keeps the SSM state in shared memory and streams
+the sequence; the TPU-native adaptation keeps the state ``h[BD, S]`` in a
+VMEM scratch buffer that persists across sequential grid steps along the
+sequence axis, while the (batch, channel-block) grid axes are parallel.
+Inputs are streamed chunk-by-chunk through VMEM blocks, so the
+``[L, D, S]`` intermediate that makes the naive formulation memory-bound
+is never materialized in HBM.
+
+Grid: (batch, channel_blocks, seq_chunks) — the last axis is sequential
+("arbitrary" dimension semantics); the scratch state is reset when the
+chunk index is 0 and carried otherwise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _selective_scan_kernel(u_ref, dt_ref, A_ref, B_ref, C_ref, D_ref,
+                           y_ref, hlast_ref, h_ref):
+    chunk = pl.program_id(2)
+
+    @pl.when(chunk == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = A_ref[...]                       # [BD, S] f32
+    Dv = D_ref[...]                      # [1, BD] f32
+    c_len = u_ref.shape[1]
+
+    def step(t, h):
+        u_t = u_ref[0, t, :]             # [BD]
+        d_t = dt_ref[0, t, :]            # [BD]
+        B_t = B_ref[0, t, :]             # [S]
+        C_t = C_ref[0, t, :]             # [S]
+        dA = jnp.exp(d_t[:, None] * A)                  # [BD, S]
+        dB = d_t[:, None] * B_t[None, :]                # [BD, S]
+        h = dA * h + dB * u_t[:, None]
+        y = jnp.sum(h * C_t[None, :], axis=1) + Dv[0] * u_t
+        y_ref[0, t, :] = y
+        return h
+
+    h = jax.lax.fori_loop(0, c_len, step, h_ref[...])
+    h_ref[...] = h
+    hlast_ref[0] = h
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def selective_scan_pallas(
+    u: jax.Array,        # f32[Bt, L, Di]
+    delta: jax.Array,    # f32[Bt, L, Di]
+    A: jax.Array,        # f32[Di, S]
+    B: jax.Array,        # f32[Bt, L, S]
+    C: jax.Array,        # f32[Bt, L, S]
+    D: jax.Array,        # f32[Di]
+    *,
+    chunk: int = 128,
+    block_d: int = 512,
+    interpret: bool = False,
+):
+    """Returns (y f32[Bt, L, Di], h_last f32[Bt, Di, S])."""
+    bt, L, di = u.shape
+    s = A.shape[1]
+    if L % chunk:
+        raise ValueError(f"L={L} must be a multiple of chunk={chunk}")
+    block_d = min(block_d, di)
+    if di % block_d:
+        raise ValueError(f"Di={di} must be a multiple of block_d={block_d}")
+    f32 = jnp.float32
+    args = [x.astype(f32) for x in (u, delta)] + [A.astype(f32)] + \
+        [x.astype(f32) for x in (B, C)] + [D.astype(f32).reshape(1, di)]
+
+    grid = (bt, di // block_d, L // chunk)
+    y, h_last = pl.pallas_call(
+        _selective_scan_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, l: (b, l, d)),  # u
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, l: (b, l, d)),  # delta
+            pl.BlockSpec((block_d, s), lambda b, d, l: (d, 0)),            # A
+            pl.BlockSpec((1, chunk, s), lambda b, d, l: (b, l, 0)),        # B
+            pl.BlockSpec((1, chunk, s), lambda b, d, l: (b, l, 0)),        # C
+            pl.BlockSpec((1, block_d), lambda b, d, l: (0, d)),            # D
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, l: (b, l, d)),  # y
+            pl.BlockSpec((1, block_d, s), lambda b, d, l: (b, d, 0)),      # h_last
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bt, L, di), f32),
+            jax.ShapeDtypeStruct((bt, di, s), f32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, s), f32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="selective_scan",
+    )(*args)
+    return y, h_last

@@ -1,0 +1,419 @@
+"""HLO text analyzer: scan-aware cost model for the CPU-hosted dry-run.
+
+``compiled.cost_analysis()`` visits every computation ONCE — a
+``lax.scan`` over 28 layers contributes its body cost a single time, so
+raw HLO FLOPs under-count scanned models by ~n_layers×.  This analyzer
+re-walks the optimized HLO text and multiplies ``while`` bodies by their
+statically-known trip counts (parsed from the loop condition's compare
+constant), recursively, yielding corrected totals for:
+
+  * matmul FLOPs (dot ops: 2 · prod(output) · prod(contracting dims)),
+  * convolution FLOPs,
+  * bytes accessed (per-op operand+output sizes; fusions counted at the
+    fusion boundary, matching XLA's own model),
+  * collective bytes by kind (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), with ring-model link-traffic
+    factors applied per participant-group size.
+
+Caveat (DESIGN.md §5): this analyzes the CPU-backend HLO; TPU fusion
+granularity differs, so *bytes* are an upper-bound proxy while *FLOPs*
+and *collective bytes* are layout-independent and transfer directly.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+_CALLED_RE = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^=]*?\})\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_TRIP_RE = re.compile(r"known_trip_count.{0,8}?n.{0,6}?(\d+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+    return n
+
+
+@dataclass
+class OpInfo:
+    name: str
+    out_type: str
+    opcode: str
+    rest: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[OpInfo] = field(default_factory=list)
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    collective_link_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    collective_count: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+
+    def add(self, other: "CostTotals", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] += v * mult
+        for k, v in other.collective_link_bytes.items():
+            self.collective_link_bytes[k] += v * mult
+        for k, v in other.collective_count.items():
+            self.collective_count[k] += int(v * mult)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    @property
+    def total_collective_link_bytes(self) -> float:
+        return sum(self.collective_link_bytes.values())
+
+
+def _parse_op_line(stripped: str) -> Optional[OpInfo]:
+    """Parse `[ROOT] %name = TYPE opcode(args), attrs...` with a balanced
+    paren scan for tuple types (which may contain `/*index=N*/` comments
+    and `{layout}` annotations)."""
+    m = _NAME_RE.match(stripped)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = stripped[m.end():]
+    if rest.startswith("("):           # tuple type: balanced-paren scan
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i + 1
+                    break
+        out_type = rest[:end]
+        rest = rest[end:]
+    else:                               # scalar/array type up to whitespace
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        out_type = rest[:sp]
+        rest = rest[sp:]
+    om = _OPCODE_RE.match(rest)
+    if not om:
+        return None
+    return OpInfo(name, out_type, om.group(1), rest[om.end():])
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        # computation header: `%name (params...) -> type {` or `ENTRY ...`
+        if stripped.endswith("{") and ("->" in stripped or stripped.startswith("ENTRY")):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", stripped)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+            continue
+        if stripped.startswith("}"):
+            continue
+        if cur is None:
+            continue
+        op = _parse_op_line(stripped)
+        if op is not None:
+            cur.ops.append(op)
+    return comps
+
+
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _operand_names(op: OpInfo) -> List[str]:
+    """Operand instruction names (args before the closing paren)."""
+    depth = 1
+    end = 0
+    for i, ch in enumerate(op.rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    else:
+        end = len(op.rest)
+    return _OPERAND_RE.findall(op.rest[:end])
+
+
+def _dims_of(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _dot_flops(op: OpInfo, types: Dict[str, str]) -> float:
+    """2 * prod(output dims) * prod(lhs contracting dims)."""
+    out_elems = _shape_elems(op.out_type)
+    cdm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    names = _operand_names(op)
+    lhs_type = types.get(names[0], "") if names else ""
+    lhs_dims = _dims_of(lhs_type)
+    if cdm is None or not lhs_dims:
+        return 2.0 * out_elems  # fallback
+    contract = 1
+    for ci in cdm.group(1).split(","):
+        if ci:
+            ci = int(ci)
+            if ci < len(lhs_dims):
+                contract *= lhs_dims[ci]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(op: OpInfo, types: Dict[str, str]) -> float:
+    out_elems = _shape_elems(op.out_type)
+    names = _operand_names(op)
+    kernel_dims = _dims_of(types.get(names[1], "")) if len(names) > 1 else []
+    kernel_elems = 1
+    for d in kernel_dims:
+        kernel_elems *= d
+    return 2.0 * out_elems * max(kernel_elems, 1)
+
+
+def _trip_count(while_op: OpInfo, cond: Optional[Computation]) -> int:
+    """Trip count of a while loop: prefer XLA's ``known_trip_count``
+    backend_config annotation (set for lax.scan); fall back to the largest
+    integer constant in the loop condition."""
+    m = _TRIP_RE.search(while_op.rest)
+    if m:
+        return int(m.group(1))
+    best = 1
+    if cond is not None:
+        for op in cond.ops:
+            if op.opcode == "constant":
+                digits = re.search(r"(\d+)", op.rest)
+                if digits:
+                    best = max(best, int(digits.group(1)))
+            for c in _CONST_RE.finditer(op.rest):
+                best = max(best, int(c.group(1)))
+    return best
+
+
+def _group_size(op: OpInfo, default: int) -> int:
+    m = _GROUPS_RE.search(op.rest)
+    if m:
+        first = m.group(1).strip("{}")
+        if first:
+            return len(first.split(","))
+    m = _GROUPS_IOTA_RE.search(op.rest)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _collective_link_factor(kind: str, n: int) -> float:
+    """Ring-model per-chip link traffic as a fraction of payload bytes."""
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if kind in ("all-gather", "reduce-scatter", "all-to-all"):
+        return (n - 1) / n
+    return 1.0  # collective-permute
+
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "copy", "after-all", "iota"}
+
+_SLICING_OPS = {"dynamic-slice", "gather", "slice"}
+
+
+def _fusion_boundary_bytes(comps: Dict[str, "Computation"], op: OpInfo,
+                           types: Dict[str, str]) -> float:
+    """Bytes for a fusion op: output + operands, EXCEPT operands that are
+    only sliced inside the fusion (layer-scan weight slices, cache
+    updates) — those count the touched bytes, not the full buffer."""
+    out_b = _shape_bytes(op.out_type)
+    names = _operand_names(op)
+    called = _CALLED_RE.search(op.rest)
+    sub = comps.get(called.group(1)) if called else None
+    if sub is None:
+        return out_b + sum(_shape_bytes(types.get(n, "")) for n in names)
+    # map parameter index -> interior param op name
+    param_names: Dict[int, str] = {}
+    for sop in sub.ops:
+        if sop.opcode == "parameter":
+            m = re.search(r"^\s*(\d+)", sop.rest)
+            if m:
+                param_names[int(m.group(1))] = sop.name
+    sub_types = {sop.name: sop.out_type for sop in sub.ops}
+    total = out_b
+    for idx, name in enumerate(names):
+        full = _shape_bytes(types.get(name, ""))
+        pname = param_names.get(idx)
+        if pname is None:
+            total += full
+            continue
+        uses = [sop for sop in sub.ops
+                if pname in _operand_names(sop) and sop.opcode != "parameter"]
+        if uses and all(
+            u.opcode in _SLICING_OPS or
+            (u.opcode == "dynamic-update-slice"
+             and _operand_names(u) and _operand_names(u)[0] == pname)
+                for u in uses):
+            touched = 0
+            for u in uses:
+                if u.opcode == "dynamic-update-slice":
+                    un = _operand_names(u)
+                    touched += 2 * (_shape_bytes(sub_types.get(un[1], ""))
+                                    if len(un) > 1 else 0)
+                else:
+                    touched += _shape_bytes(u.out_type)
+            total += min(full, touched)
+        else:
+            total += full
+    return total
+
+
+def analyze_computation(
+    comps: Dict[str, Computation], name: str,
+    default_group: int, memo: Dict[str, CostTotals],
+    trip_overrides: Optional[Dict[str, int]] = None,
+) -> CostTotals:
+    if name in memo:
+        return memo[name]
+    memo[name] = CostTotals()     # cycle guard
+    comp = comps.get(name)
+    if comp is None:
+        return memo[name]
+    types: Dict[str, str] = {op.name: op.out_type for op in comp.ops}
+    tot = CostTotals()
+    for op in comp.ops:
+        oc = op.opcode
+        if oc == "while":
+            body = _CALLED_RE.search(op.rest)
+            cond = _COND_RE.search(op.rest)
+            if trip_overrides and op.name in trip_overrides:
+                trips = trip_overrides[op.name]
+            else:
+                trips = _trip_count(
+                    op, comps.get(cond.group(1)) if cond else None)
+            if body:
+                sub = analyze_computation(comps, body.group(1), default_group,
+                                          memo, trip_overrides)
+                tot.add(sub, trips)
+            continue
+        if oc in ("call", "fusion", "conditional", "custom-call", "map",
+                  "reduce", "reduce-window", "sort", "scatter", "select-and-scatter"):
+            # recurse into called computations for FLOPs/collectives; for
+            # fusions the *bytes* are counted at the fusion boundary only
+            # (interior values live in registers), matching XLA's model.
+            for cm in _CALLED_RE.finditer(op.rest):
+                sub = analyze_computation(comps, cm.group(1), default_group,
+                                          memo, trip_overrides)
+                if oc in ("call", "conditional"):
+                    tot.add(sub, 1.0)
+                else:
+                    tot.flops += sub.flops
+                    for k, v in sub.collective_bytes.items():
+                        tot.collective_bytes[k] += v
+                    for k, v in sub.collective_link_bytes.items():
+                        tot.collective_link_bytes[k] += v
+                    for k, v in sub.collective_count.items():
+                        tot.collective_count[k] += v
+        if oc == "dot":
+            tot.flops += _dot_flops(op, types)
+        elif oc == "convolution":
+            tot.flops += _conv_flops(op, types)
+        elif oc in ("add", "multiply", "subtract", "divide", "exponential",
+                    "tanh", "rsqrt", "sqrt", "power", "maximum", "minimum",
+                    "log", "negate", "compare", "select"):
+            tot.flops += _shape_elems(op.out_type)
+        for kind in COLLECTIVES:
+            if oc == kind or oc == kind + "-start":
+                payload = _shape_bytes(op.out_type)
+                if kind in ("all-gather",):
+                    pass  # output is the gathered (full) buffer
+                n = _group_size(op, default_group)
+                tot.collective_bytes[kind] += payload
+                tot.collective_link_bytes[kind] += payload * _collective_link_factor(kind, n)
+                tot.collective_count[kind] += 1
+                break
+        if oc not in _SKIP_BYTES_OPS and not oc.endswith("-done"):
+            out_b = _shape_bytes(op.out_type)
+            names = _operand_names(op)
+            if oc == "fusion":
+                tot.bytes += _fusion_boundary_bytes(comps, op, types)
+            elif oc in ("dynamic-slice", "gather", "broadcast", "reshape",
+                        "slice", "transpose", "reverse", "pad", "concatenate"):
+                # reads ≈ bytes actually touched, not the whole operand
+                tot.bytes += 2.0 * out_b
+            elif oc in ("dynamic-update-slice", "scatter"):
+                upd = (_shape_bytes(types.get(names[1], ""))
+                       if len(names) > 1 else out_b)
+                tot.bytes += 2.0 * upd
+            else:
+                in_b = sum(_shape_bytes(types.get(n, "")) for n in names)
+                tot.bytes += out_b + in_b
+    memo[name] = tot
+    return tot
+
+
+def analyze_hlo_text(text: str, default_group: int = 1,
+                     entry: Optional[str] = None) -> CostTotals:
+    comps = parse_hlo(text)
+    if entry is None:
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+        entry = m.group(1) if m else next(iter(comps))
+    # find which computations are called by others; entry = uncalled one
+    memo: Dict[str, CostTotals] = {}
+    return analyze_computation(comps, entry, default_group, memo)

@@ -1,0 +1,39 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so that
+importing this module never touches jax device state — the dry-run driver
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any
+jax initialization; everything else (smoke tests, benches) sees 1 device.
+
+Topology model: TPU v5e pods — a pod is a 16×16 slice (256 chips); the
+multi-pod mesh stacks 2 pods on a leading ``pod`` axis (data-parallel
+across pods, as inter-pod DCI bandwidth ≪ intra-pod ICI).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2,
+                    pods: Optional[int] = None) -> Mesh:
+    """Small mesh for CI-scale sharding tests (requires host device count
+    >= product, set via XLA_FLAGS in the spawning process)."""
+    if pods:
+        return jax.make_mesh((pods, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+# v5e-like hardware constants (roofline denominators; see EXPERIMENTS.md)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW_PER_LINK = 50e9            # bytes/s per link (~50 GB/s/link)
+HBM_PER_CHIP = 16 * 1024 ** 3     # v5e: 16 GiB

@@ -1,0 +1,83 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it runs reduced (smoke) configs end-to-end; on a
+real fleet the same entrypoint runs the full config on the production
+mesh (the dry-run proves each (arch × shape × mesh) compiles).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from ..checkpoint import Checkpointer
+from ..configs import ARCH_IDS, get_config
+from ..models import build_model
+from ..sharding import use_rules
+from ..training import (AdamWConfig, TrainStepConfig, adamw_init,
+                        make_batch_for, make_train_step)
+from ..configs.base import ShapeSpec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--rules", default="baseline")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.smoke:
+        cfg = cfg.replace(dtype="float32")
+    model = build_model(cfg)
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"batch={args.batch} seq={args.seq}")
+
+    params = model.init_params(jax.random.PRNGKey(0))
+    ocfg = AdamWConfig(lr=args.lr, warmup_steps=min(30, args.steps // 3),
+                       total_steps=args.steps)
+    opt = adamw_init(params, ocfg)
+    tcfg = TrainStepConfig(microbatches=args.microbatches, remat=args.remat)
+    step_fn = jax.jit(make_train_step(model, ocfg, tcfg),
+                      donate_argnums=(0, 1))
+
+    ck = Checkpointer(args.ckpt_dir or f"results/train-{cfg.name}", keep=2)
+    start = 0
+    if args.resume:
+        from ..checkpoint.checkpointer import latest_step
+        last = latest_step(ck.directory)
+        if last:
+            restored, mani = ck.restore({"params": params, "opt": opt})
+            params, opt = restored["params"], restored["opt"]
+            start = mani["step"]
+            print(f"resumed from step {start}")
+
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = make_batch_for(cfg, shape, i, task="copy")
+        params, opt, met = step_fn(params, opt, batch)
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss {float(met['loss']):.4f} "
+                  f"lr {float(met['lr']):.2e}")
+        if i and i % args.ckpt_every == 0:
+            ck.save(i, {"params": params, "opt": opt})
+    ck.save(args.steps, {"params": params, "opt": opt}, blocking=True)
+    print(f"done in {time.time()-t0:.1f}s; checkpoints in {ck.directory}")
+
+
+if __name__ == "__main__":
+    main()

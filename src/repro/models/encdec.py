@@ -1,0 +1,233 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings ``frames [B, F, d]`` (what the two conv
+layers would produce).  Sinusoidal absolute positions on both sides
+(the paper uses learned decoder positions; noted in DESIGN.md).
+
+Decode cells: self-attention cache sized to the assigned ``seq_len``
+(mechanical application of the decode shapes); cross-attention K/V are
+cached at prefill from the encoder output.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import shard
+from .layers import attention, mlp, rms_norm
+
+
+def sinusoid(length: int, d: int, dtype) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------- params
+def _attn_specs(cfg, prefix=""):
+    d, hd, h, kvh = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    return {
+        prefix + "wq": ((d, h * hd), ("embed", "heads"), 0),
+        prefix + "wk": ((d, kvh * hd), ("embed", "kv_heads"), 0),
+        prefix + "wv": ((d, kvh * hd), ("embed", "kv_heads"), 0),
+        prefix + "wo": ((h * hd, d), ("heads", "embed"), 0),
+    }
+
+
+def _ffn_specs(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    s = {"w_in": ((d, f), ("embed", "mlp"), 0),
+         "w_out": ((f, d), ("mlp", "embed"), 0)}
+    if cfg.gated_ffn:
+        s["w_gate"] = ((d, f), ("embed", "mlp"), 0)
+    return s
+
+
+def param_specs(cfg: ModelConfig) -> Dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    enc_block = {"ln1": ((d,), ("embed_act",), None),
+                 "ln2": ((d,), ("embed_act",), None)}
+    enc_block.update(_attn_specs(cfg))
+    enc_block.update(_ffn_specs(cfg))
+    dec_block = {"ln1": ((d,), ("embed_act",), None),
+                 "ln_cross": ((d,), ("embed_act",), None),
+                 "ln2": ((d,), ("embed_act",), None)}
+    dec_block.update(_attn_specs(cfg))
+    dec_block.update(_attn_specs(cfg, prefix="c_"))
+    dec_block.update(_ffn_specs(cfg))
+
+    def stack(block, n):
+        return {k: ((n,) + shape, ("layers",) + axes,
+                    None if fan is None else fan + 1)
+                for k, (shape, axes, fan) in block.items()}
+
+    tree = {
+        "embed": ((v, d), ("vocab", "embed"), 1),
+        "enc_blocks": stack(enc_block, cfg.encoder_layers),
+        "dec_blocks": stack(dec_block, cfg.n_layers),
+        "enc_final_norm": ((d,), ("embed_act",), None),
+        "final_norm": ((d,), ("embed_act",), None),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ((d, v), ("embed", "vocab"), 0)
+    return tree
+
+
+# ---------------------------------------------------------------- encoder
+def _enc_block(h, p, cfg):
+    b, s, d = h.shape
+    hd, nh, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    x = rms_norm(h, p["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, nh, hd)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(b, s, kvh, hd)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(b, s, kvh, hd)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    o = attention(q, k, v, pos, pos, causal=False)
+    h = h + jnp.einsum("bse,ed->bsd", o.reshape(b, s, nh * hd), p["wo"])
+    x = rms_norm(h, p["ln2"], cfg.norm_eps)
+    h = h + mlp(x, p["w_in"], p.get("w_gate"), p["w_out"], cfg.gated_ffn)
+    return shard(h, "batch", "seq", "embed_act")
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array, remat="full"):
+    h = frames.astype(jnp.dtype(cfg.dtype))
+    h = h + sinusoid(h.shape[1], cfg.d_model, h.dtype)[None]
+    h = shard(h, "batch", "seq", "embed_act")
+    fn = functools.partial(_enc_block, cfg=cfg)
+    if remat == "full":
+        fn = jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(lambda c, bp: (fn(c, bp), {}), h, params["enc_blocks"])
+    return rms_norm(h, params["enc_final_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------- decoder
+def _dec_block(h, p, cache_in, positions, enc_out, cfg, mode):
+    b, s, d = h.shape
+    hd, nh, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    # --- causal self attention (cached in decode) ---
+    x = rms_norm(h, p["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, nh, hd)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(b, s, kvh, hd)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(b, s, kvh, hd)
+    new_cache = {}
+    if mode == "decode":
+        kc, vc = cache_in["k"], cache_in["v"]
+        idx = positions[:, 0]
+        kc = kc.at[jnp.arange(b), idx].set(k[:, 0])
+        vc = vc.at[jnp.arange(b), idx].set(v[:, 0])
+        kv_pos = jnp.broadcast_to(jnp.arange(kc.shape[1], dtype=jnp.int32),
+                                  (b, kc.shape[1]))
+        o = attention(q, kc, vc, positions, kv_pos, causal=True)
+        new_cache.update({"k": kc, "v": vc})
+    else:
+        o = attention(q, k, v, positions, positions, causal=True)
+        if mode == "prefill":
+            new_cache.update({"k": k, "v": v})
+    h = h + jnp.einsum("bse,ed->bsd", o.reshape(b, s, nh * hd), p["wo"])
+
+    # --- cross attention ---
+    x = rms_norm(h, p["ln_cross"], cfg.norm_eps)
+    q = jnp.einsum("bsd,de->bse", x, p["c_wq"]).reshape(b, s, nh, hd)
+    if mode == "decode":
+        ck, cv = cache_in["ck"], cache_in["cv"]
+        new_cache.update({"ck": ck, "cv": cv})
+    else:
+        ck = jnp.einsum("bfd,de->bfe", enc_out, p["c_wk"]).reshape(
+            b, enc_out.shape[1], kvh, hd)
+        cv = jnp.einsum("bfd,de->bfe", enc_out, p["c_wv"]).reshape(
+            b, enc_out.shape[1], kvh, hd)
+        if mode == "prefill":
+            new_cache.update({"ck": ck, "cv": cv})
+    f = ck.shape[1]
+    cpos = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32), (b, f))
+    o = attention(q, ck, cv, positions, cpos, causal=False)
+    h = h + jnp.einsum("bse,ed->bsd", o.reshape(b, s, nh * hd), p["c_wo"])
+
+    # --- FFN ---
+    x = rms_norm(h, p["ln2"], cfg.norm_eps)
+    h = h + mlp(x, p["w_in"], p.get("w_gate"), p["w_out"], cfg.gated_ffn)
+    return shard(h, "batch", "seq", "embed_act"), (new_cache or None)
+
+
+def forward(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,                      # [B, S_dec]
+    *,
+    frames: Optional[jax.Array] = None,     # [B, F, d] (train/prefill)
+    cache: Optional[Dict] = None,
+    mode: str = "train",
+    remat: str = "full",
+) -> Tuple[jax.Array, Optional[Dict]]:
+    b, s = tokens.shape
+    dt = jnp.dtype(cfg.dtype)
+    enc_out = None
+    if mode in ("train", "prefill"):
+        assert frames is not None
+        enc_out = encode(params, cfg, frames, remat=remat)
+
+    h = params["embed"].astype(dt)[tokens]
+    if mode == "decode":
+        positions = cache["index"][:, None]
+        max_seq = cache["blocks"]["k"].shape[2]
+        pos_tbl = sinusoid(max_seq, cfg.d_model, dt)
+        h = h + pos_tbl[cache["index"], :][:, None, :]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        h = h + sinusoid(s, cfg.d_model, dt)[None]
+    h = shard(h, "batch", "seq", "embed_act")
+
+    fn = functools.partial(_dec_block, positions=positions, enc_out=enc_out,
+                           cfg=cfg, mode=mode)
+    if remat == "full":
+        fn = jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cache is not None:
+        h, cache_ys = jax.lax.scan(
+            lambda c, xs: fn(c, xs[0], xs[1]), h,
+            (params["dec_blocks"], cache["blocks"]))
+    else:
+        h, cache_ys = jax.lax.scan(
+            lambda c, bp: fn(c, bp, None), h, params["dec_blocks"])
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(h.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    logits = shard(logits, "batch", "seq", "vocab")
+
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {"blocks": cache_ys,
+                     "index": jnp.full((b,), s, dtype=jnp.int32)}
+    elif mode == "decode":
+        new_cache = {"blocks": cache_ys, "index": cache["index"] + 1}
+    return logits, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               n_frames: int, dtype=None) -> Dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    return {
+        "blocks": {
+            "k": jnp.zeros((L, batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((L, batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype),
+            "ck": jnp.zeros((L, batch, n_frames, cfg.n_kv_heads, cfg.hd), dtype),
+            "cv": jnp.zeros((L, batch, n_frames, cfg.n_kv_heads, cfg.hd), dtype),
+        },
+        "index": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_logical_axes(cfg: ModelConfig) -> Dict:
+    ax = ("layers", "cache_batch", "cache_seq", "cache_heads", None)
+    return {"blocks": {"k": ax, "v": ax, "ck": ax, "cv": ax},
+            "index": ("cache_batch",)}

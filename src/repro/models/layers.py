@@ -1,0 +1,106 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (chunked,
+flash-style online softmax in pure jnp), gated/classic MLP.
+
+All functions are mesh-agnostic; activations carry logical sharding
+annotations via ``repro.sharding.shard``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [..., S, H, D]; positions: [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    # positions [..., S] -> angles [..., S, 1, half]
+    ang = positions.astype(jnp.float32)[..., None, None] * freqs
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([
+        x1 * cos - x2 * sin,
+        x2 * cos + x1 * sin,
+    ], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _attn_one_q_chunk(q_c, k, v, q_pos_c, kv_pos, scale, causal):
+    """q_c: [B, Cq, KV, G, D]; k/v: [B, S, KV, D] -> [B, Cq, KV, G, D]."""
+    s = jnp.einsum("bqkgd,bskd->bqkgs", q_c, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = kv_pos[:, None, :] <= q_pos_c[:, :, None]         # [B, Cq, S]
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqkgs,bskd->bqkgd", p.astype(v.dtype), v)
+
+
+def attention(
+    q: jax.Array,                    # [B, Sq, H, D]
+    k: jax.Array,                    # [B, Skv, KV, D]
+    v: jax.Array,                    # [B, Skv, KV, D]
+    q_positions: jax.Array,          # [B, Sq] int32
+    kv_positions: jax.Array,         # [B, Skv] int32  (cache layout order)
+    causal: bool = True,
+    q_chunk: int = 512,
+) -> jax.Array:
+    """GQA attention, chunked over the query axis.
+
+    Each query chunk attends to the full K/V — scores for one chunk are
+    [B, Cq, H, Skv], never the full [Sq, Skv] matrix.  This is the
+    memory-bounded formulation a TPU flash kernel implements; in pure jnp
+    it lowers everywhere (CPU dry-run included) while keeping peak
+    activation memory O(Cq·Skv).  Masking is position-based, so it is
+    correct for prefill (q_pos == kv_pos) and ragged decode caches alike.
+    """
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    scale = d ** -0.5
+    qg = q.reshape(b, sq, kv, g, d)
+
+    if sq <= q_chunk:
+        out = _attn_one_q_chunk(qg, k, v, q_positions, kv_positions, scale, causal)
+        return out.reshape(b, sq, h, d)
+
+    if sq % q_chunk:
+        raise ValueError(f"Sq={sq} not divisible by q_chunk={q_chunk}")
+    nq = sq // q_chunk
+
+    def body(carry, xs):
+        q_c, qp_c = xs
+        o = _attn_one_q_chunk(q_c, k, v, qp_c, kv_positions, scale, causal)
+        return carry, o
+
+    q_chunks = jnp.moveaxis(qg.reshape(b, nq, q_chunk, kv, g, d), 1, 0)
+    qp_chunks = jnp.moveaxis(q_positions.reshape(b, nq, q_chunk), 1, 0)
+    _, outs = jax.lax.scan(body, None, (q_chunks, qp_chunks))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, d)
+    return out
+
+
+def mlp(x, w_in, w_gate, w_out, gated: bool = True):
+    """SwiGLU (gated) or classic GELU MLP.  x: [..., d]."""
+    h = jnp.einsum("...d,df->...f", x, w_in)
+    if gated:
+        g = jnp.einsum("...d,df->...f", x, w_gate)
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shard(h, "batch", "seq", "mlp")
+    return jnp.einsum("...f,fd->...d", h, w_out)

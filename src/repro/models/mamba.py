@@ -1,0 +1,90 @@
+"""Mamba-1 block (selective SSM) — attention-free sequence mixer.
+
+Train/prefill uses the chunked selective-scan kernel (Pallas on TPU, jnp
+scan oracle elsewhere — ``repro.kernels.ops``); decode is a single-step
+state update (O(1) per token — the reason long_500k runs for ssm/hybrid).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from ..sharding import shard
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array      # [B, cw-1, di]   last conv inputs
+    ssm: jax.Array       # [B, di, S]      SSM hidden state (f32)
+
+
+def _causal_depthwise_conv(u: jax.Array, w: jax.Array, b: jax.Array):
+    """u: [B, T, di]; w: [di, cw]; left-padded causal depthwise conv."""
+    cw = w.shape[1]
+    out = u * w[None, None, :, -1]
+    for i in range(1, cw):
+        shifted = jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, :-i, :]
+        out = out + shifted * w[None, None, :, -1 - i]
+    return out + b[None, None, :]
+
+
+def mamba_mixer(
+    x: jax.Array,                       # [B, T, d] (post-norm)
+    p: dict,
+    *,
+    ssm_state: int,
+    conv_width: int,
+    dt_rank: int,
+    cache: Optional[MambaCache] = None,
+    return_cache: bool = False,
+) -> Tuple[jax.Array, Optional[MambaCache]]:
+    b, t, d = x.shape
+    di = p["A_log"].shape[0]
+
+    # keep sliced weights sharded inside the layer scan (see transformer)
+    in_proj = shard(p["in_proj"], "embed", "inner")
+    xz = jnp.einsum("btd,de->bte", x, in_proj)
+    u, z = jnp.split(xz, 2, axis=-1)                     # [B, T, di] each
+
+    if cache is not None and t == 1:
+        # ---- decode: O(1) per-token update --------------------------
+        conv_in = jnp.concatenate([cache.conv, u], axis=1)       # [B, cw, di]
+        new_conv = conv_in[:, 1:, :]
+        u1 = jnp.einsum("bcd,dc->bd", conv_in, p["conv_w"]) + p["conv_b"]
+        u1 = jax.nn.silu(u1)                                     # [B, di]
+        dbc = jnp.einsum("bd,dr->br", u1, p["x_proj"])
+        dt_r, B_s, C_s = jnp.split(dbc, [dt_rank, dt_rank + ssm_state], axis=-1)
+        dt = jax.nn.softplus(jnp.einsum("br,rd->bd", dt_r, p["dt_proj_w"])
+                             + p["dt_proj_b"])                   # [B, di]
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))             # [di, S]
+        dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A[None])
+        dB = dt.astype(jnp.float32)[..., None] * B_s.astype(jnp.float32)[:, None, :]
+        h = dA * cache.ssm + dB * u1.astype(jnp.float32)[..., None]
+        y = jnp.einsum("bds,bs->bd", h, C_s.astype(jnp.float32)) \
+            + p["D"] * u1.astype(jnp.float32)
+        y = y.astype(x.dtype)[:, None, :]                        # [B, 1, di]
+        new_cache = MambaCache(conv=new_conv, ssm=h)
+    else:
+        # ---- train / prefill: chunked selective scan -----------------
+        u1 = _causal_depthwise_conv(u, p["conv_w"], p["conv_b"])
+        u1 = jax.nn.silu(u1)
+        dbc = jnp.einsum("btd,dr->btr", u1, p["x_proj"])
+        dt_r, B_s, C_s = jnp.split(dbc, [dt_rank, dt_rank + ssm_state], axis=-1)
+        dt = jax.nn.softplus(jnp.einsum("btr,rd->btd", dt_r, p["dt_proj_w"])
+                             + p["dt_proj_b"])
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        y, h_last = ops.selective_scan(u1, dt, A, B_s, C_s, p["D"])
+        y = y.astype(x.dtype)
+        new_cache = None
+        if return_cache:
+            cw = conv_width
+            tail = u[:, -(cw - 1):, :] if t >= cw - 1 else jnp.pad(
+                u, ((0, 0), (cw - 1 - t, 0), (0, 0)))
+            new_cache = MambaCache(conv=tail, ssm=h_last)
+
+    y = y * jax.nn.silu(z)
+    out_proj = shard(p["out_proj"], "inner", "embed")
+    out = jnp.einsum("bte,ed->btd", y, out_proj)
+    return out, new_cache

@@ -1,0 +1,116 @@
+"""Unified model API across families (the ``--arch`` dispatch point).
+
+``build_model(cfg)`` returns a :class:`Model` exposing:
+
+    init_params(key) / param_shapes() / param_logical_axes()
+    apply(params, batch, mode, cache=None)  -> (logits, new_cache)
+    init_cache(batch, max_seq) / cache_shapes / cache_logical_axes
+    input_specs(shape_spec)  -> dict of ShapeDtypeStructs + logical axes
+
+``input_specs`` is the dry-run contract: ShapeDtypeStruct stand-ins for
+every model input of a given assigned shape cell, with the modality
+frontends stubbed (audio frames / vision patches arrive as precomputed
+embeddings, per the assignment).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeSpec
+from . import encdec, transformer
+from .params import (init_from_specs, logical_axes_from_specs,
+                     shapes_from_specs)
+
+WHISPER_CROSS_FRAMES = 1500      # 30 s window after conv downsampling
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------ params
+    def _specs(self) -> Dict:
+        if self.cfg.family == "audio":
+            return encdec.param_specs(self.cfg)
+        return transformer.param_specs(self.cfg)
+
+    def init_params(self, key: jax.Array) -> Dict:
+        return init_from_specs(self._specs(), key, jnp.dtype(self.cfg.dtype))
+
+    def param_shapes(self) -> Dict:
+        return shapes_from_specs(self._specs(), jnp.dtype(self.cfg.dtype))
+
+    def param_logical_axes(self) -> Dict:
+        return logical_axes_from_specs(self._specs())
+
+    # ------------------------------------------------------------ apply
+    def apply(self, params: Dict, batch: Dict, *, mode: str = "train",
+              cache: Optional[Dict] = None, remat: str = "full"):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return encdec.forward(
+                params, cfg, batch["tokens"], frames=batch.get("frames"),
+                cache=cache, mode=mode, remat=remat)
+        return transformer.forward(
+            params, cfg, batch["tokens"], patches=batch.get("patches"),
+            cache=cache, mode=mode, remat=remat)
+
+    # ------------------------------------------------------------ cache
+    def init_cache(self, batch: int, max_seq: int) -> Dict:
+        if self.cfg.family == "audio":
+            return encdec.init_cache(self.cfg, batch, max_seq,
+                                     WHISPER_CROSS_FRAMES)
+        return transformer.init_cache(self.cfg, batch, max_seq)
+
+    def cache_shapes(self, batch: int, max_seq: int) -> Dict:
+        return jax.eval_shape(lambda: self.init_cache(batch, max_seq))
+
+    def cache_logical_axes(self) -> Dict:
+        if self.cfg.family == "audio":
+            return encdec.cache_logical_axes(self.cfg)
+        return transformer.cache_logical_axes(self.cfg)
+
+    # ------------------------------------------------------------ inputs
+    def input_specs(self, shape: ShapeSpec) -> Tuple[Dict, Dict]:
+        """(ShapeDtypeStruct dict, logical-axes dict) for one shape cell."""
+        cfg = self.cfg
+        b = shape.global_batch
+        dt = jnp.dtype(cfg.dtype)
+        tok = lambda s: jax.ShapeDtypeStruct((b, s), jnp.int32)
+        tok_ax = ("batch", "seq")
+
+        if shape.kind == "decode":
+            specs = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+            axes = {"tokens": ("batch", None)}
+            return specs, axes
+
+        if cfg.family == "audio":
+            # encoder frames at seq_len (conv-stub embeddings), decoder
+            # tokens at seq_len//8 (mechanical teacher-forcing length)
+            sd = max(shape.seq_len // 8, 8)
+            specs = {
+                "frames": jax.ShapeDtypeStruct((b, shape.seq_len, cfg.d_model), dt),
+                "tokens": tok(sd),
+            }
+            axes = {"frames": ("batch", "seq", "embed_act"), "tokens": tok_ax}
+            return specs, axes
+
+        if cfg.family == "vlm":
+            p = cfg.vision_patches
+            st = shape.seq_len - p
+            specs = {
+                "tokens": tok(st),
+                "patches": jax.ShapeDtypeStruct((b, p, cfg.d_model), dt),
+            }
+            axes = {"tokens": tok_ax, "patches": ("batch", "seq", "embed_act")}
+            return specs, axes
+
+        return {"tokens": tok(shape.seq_len)}, {"tokens": tok_ax}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

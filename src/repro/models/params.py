@@ -1,0 +1,73 @@
+"""Generic parameter machinery shared by all model families.
+
+A *spec tree* mirrors the parameter pytree with leaves
+``(shape, logical_axes, fan_in_axis)``; from it we derive initialization,
+logical sharding axes, and ShapeDtypeStructs (dry-run, no allocation).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flatten_specs(tree: Dict, prefix=()) -> Iterator[Tuple[Tuple, Tuple]]:
+    for k, val in tree.items():
+        if isinstance(val, dict):
+            yield from flatten_specs(val, prefix + (k,))
+        else:
+            yield prefix + (k,), val
+
+
+def _set(node: Dict, path: Tuple, leaf) -> None:
+    for p in path[:-1]:
+        node = node.setdefault(p, {})
+    node[path[-1]] = leaf
+
+
+_F32_LEAVES = ("A_log", "D")
+
+
+def init_from_specs(specs: Dict, key: jax.Array, dtype) -> Dict:
+    flat = list(flatten_specs(specs))
+    keys = jax.random.split(key, len(flat))
+    out: Dict = {}
+    for (path, (shape, _axes, fan)), k in zip(flat, keys):
+        name = path[-1]
+        if name.startswith("ln") or name.endswith("_norm"):
+            leaf = jnp.ones(shape, dtype)
+        elif name in ("conv_b", "dt_proj_b"):
+            leaf = jnp.zeros(shape, dtype)
+        elif name == "A_log":
+            s = shape[-1]
+            leaf = jnp.log(jnp.broadcast_to(
+                jnp.arange(1, s + 1, dtype=jnp.float32), shape))
+        elif name == "D":
+            leaf = jnp.ones(shape, jnp.float32)
+        else:
+            scale = 0.02 if fan is None else float(shape[fan]) ** -0.5
+            leaf = (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+        _set(out, path, leaf)
+    return out
+
+
+def logical_axes_from_specs(specs: Dict) -> Dict:
+    out: Dict = {}
+    for path, (_shape, axes, _fan) in flatten_specs(specs):
+        _set(out, path, axes)
+    return out
+
+
+def shapes_from_specs(specs: Dict, dtype) -> Dict:
+    out: Dict = {}
+    for path, (shape, _axes, _fan) in flatten_specs(specs):
+        dt = jnp.float32 if path[-1] in _F32_LEAVES else dtype
+        _set(out, path, jax.ShapeDtypeStruct(shape, dt))
+    return out
+
+
+def count_params(shapes: Dict) -> int:
+    leaves = jax.tree_util.tree_leaves(shapes)
+    return sum(int(jnp.prod(jnp.asarray(l.shape))) if l.shape else 1
+               for l in leaves)

@@ -1,0 +1,377 @@
+"""Decoder-only LM covering the dense / moe / vlm / hybrid / ssm families.
+
+Layers are stacked per *scan period* (``cfg.scan_period``: the smallest
+layer pattern that repeats — 1 for homogeneous stacks, 2 for llama4's
+alternating dense/MoE, 8 for Jamba's 7:1 mamba:attention interleave) and
+iterated with ``jax.lax.scan`` so the traced HLO stays O(period), not
+O(n_layers) — essential for compiling 88-layer models on the 512-device
+dry-run mesh.
+
+Three modes share one code path:
+  train    — full-sequence causal forward, no cache;
+  prefill  — train-like forward that also emits a KV/SSM cache;
+  decode   — single-token step against a fixed-size cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import shard
+from .layers import attention, mlp, rms_norm, rope
+from .mamba import MambaCache, mamba_mixer
+from .moe import MoEParams, moe_ffn
+
+# ----------------------------------------------------------------------
+# Parameter specification: leaf name -> (shape, logical axes, fan_in axis)
+# ----------------------------------------------------------------------
+
+def _sublayer_specs(cfg: ModelConfig, i: int) -> Dict[str, Tuple]:
+    d, hd, h, kvh = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    specs: Dict[str, Tuple] = {"ln1": ((d,), ("embed_act",), None)}
+    kind = cfg.layer_kind(i)
+    if kind == "attn":
+        specs.update({
+            "wq": ((d, h * hd), ("embed", "heads"), 0),
+            "wk": ((d, kvh * hd), ("embed", "kv_heads"), 0),
+            "wv": ((d, kvh * hd), ("embed", "kv_heads"), 0),
+            "wo": ((h * hd, d), ("heads", "embed"), 0),
+        })
+        if cfg.qk_norm:
+            specs["q_norm"] = ((hd,), (None,), None)
+            specs["k_norm"] = ((hd,), (None,), None)
+    else:
+        di, s, dtr = cfg.d_inner, cfg.ssm_state, cfg.dtr
+        specs.update({
+            "in_proj": ((d, 2 * di), ("embed", "inner"), 0),
+            "conv_w": ((di, cfg.conv_width), ("inner", None), None),
+            "conv_b": ((di,), ("inner",), None),
+            "x_proj": ((di, dtr + 2 * s), ("inner", None), 0),
+            "dt_proj_w": ((dtr, di), (None, "inner"), 0),
+            "dt_proj_b": ((di,), ("inner",), None),
+            "A_log": ((di, s), ("inner", "state"), None),
+            "D": ((di,), ("inner",), None),
+            "out_proj": ((di, d), ("inner", "embed"), 0),
+        })
+    fk = cfg.ffn_kind(i)
+    if fk != "none":
+        specs["ln2"] = ((d,), ("embed_act",), None)
+    if fk == "dense":
+        f = cfg.d_ff
+        specs.update({
+            "w_in": ((d, f), ("embed", "mlp"), 0),
+            "w_out": ((f, d), ("mlp", "embed"), 0),
+        })
+        if cfg.gated_ffn:
+            specs["w_gate"] = ((d, f), ("embed", "mlp"), 0)
+    elif fk == "moe":
+        e, f = cfg.n_experts, (cfg.moe_d_ff or cfg.d_ff)
+        specs.update({
+            "router": ((d, e), ("embed", None), 0),
+            "moe_w_in": ((e, d, f), ("experts", "expert_embed", "expert_mlp"), 1),
+            "moe_w_out": ((e, f, d), ("experts", "expert_mlp", "expert_embed"), 1),
+        })
+        if cfg.gated_ffn:
+            specs["moe_w_gate"] = ((e, d, f),
+                                   ("experts", "expert_embed", "expert_mlp"), 1)
+        if cfg.shared_expert:
+            specs.update({
+                "shared_w_in": ((d, cfg.d_ff), ("embed", "mlp"), 0),
+                "shared_w_out": ((cfg.d_ff, d), ("mlp", "embed"), 0),
+            })
+            if cfg.gated_ffn:
+                specs["shared_w_gate"] = ((d, cfg.d_ff), ("embed", "mlp"), 0)
+    return specs
+
+
+def param_specs(cfg: ModelConfig) -> Dict:
+    """Full pytree of (shape, logical_axes, fan_in_axis); block leaves get a
+    leading n_periods stacking axis."""
+    d, v = cfg.d_model, cfg.vocab_size
+    period, nper = cfg.scan_period, cfg.n_layers // cfg.scan_period
+    tree: Dict = {
+        "embed": ((v, d), ("vocab", "embed"), 1),
+        "final_norm": ((d,), ("embed_act",), None),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ((d, v), ("embed", "vocab"), 0)
+    blocks: Dict = {}
+    for j in range(period):
+        sub = {}
+        for name, (shape, axes, fan) in _sublayer_specs(cfg, j).items():
+            sub[name] = ((nper,) + shape, ("layers",) + axes,
+                         None if fan is None else fan + 1)
+        blocks[f"L{j}"] = sub
+    tree["blocks"] = blocks
+    return tree
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=None) -> Dict:
+    from .params import init_from_specs
+    return init_from_specs(param_specs(cfg), key, dtype or jnp.dtype(cfg.dtype))
+
+
+def param_logical_axes(cfg: ModelConfig) -> Dict:
+    from .params import logical_axes_from_specs
+    return logical_axes_from_specs(param_specs(cfg))
+
+
+def param_shapes(cfg: ModelConfig, dtype=None) -> Dict:
+    """ShapeDtypeStruct pytree (dry-run: no allocation)."""
+    from .params import shapes_from_specs
+    return shapes_from_specs(param_specs(cfg), dtype or jnp.dtype(cfg.dtype))
+
+
+# ----------------------------------------------------------------------
+# Cache
+# ----------------------------------------------------------------------
+
+def _quantize_kv(x):
+    """int8 symmetric quantization over head_dim: x [..., hd] ->
+    (int8[..., hd], f32 scale[..., 1])."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(scale, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> Dict:
+    """Per-period-stacked cache pytree; ``index`` is the fill pointer."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    period, nper = cfg.scan_period, cfg.n_layers // cfg.scan_period
+    quant = cfg.kv_cache_dtype == "int8"
+    blocks: Dict = {}
+    for j in range(period):
+        if cfg.layer_kind(j) == "attn":
+            shape = (nper, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+            if quant:
+                blocks[f"L{j}"] = {
+                    "k": jnp.zeros(shape, jnp.int8),
+                    "v": jnp.zeros(shape, jnp.int8),
+                    "k_scale": jnp.zeros(shape[:-1] + (1,), jnp.float32),
+                    "v_scale": jnp.zeros(shape[:-1] + (1,), jnp.float32),
+                }
+                continue
+            blocks[f"L{j}"] = {
+                "k": jnp.zeros(shape, dtype),
+                "v": jnp.zeros(shape, dtype),
+            }
+        else:
+            blocks[f"L{j}"] = {
+                "conv": jnp.zeros((nper, batch, cfg.conv_width - 1, cfg.d_inner), dtype),
+                "ssm": jnp.zeros((nper, batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+            }
+    return {"blocks": blocks, "index": jnp.zeros((batch,), jnp.int32)}
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> Dict:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq, dtype))
+
+
+def cache_logical_axes(cfg: ModelConfig) -> Dict:
+    period = cfg.scan_period
+    blocks: Dict = {}
+    kv_ax = ("layers", "cache_batch", "cache_seq", "cache_heads", None)
+    for j in range(period):
+        if cfg.layer_kind(j) == "attn":
+            blocks[f"L{j}"] = {"k": kv_ax, "v": kv_ax}
+            if cfg.kv_cache_dtype == "int8":
+                blocks[f"L{j}"]["k_scale"] = kv_ax
+                blocks[f"L{j}"]["v_scale"] = kv_ax
+        else:
+            blocks[f"L{j}"] = {
+                "conv": ("layers", "cache_batch", None, "inner"),
+                "ssm": ("layers", "cache_batch", "inner", "state"),
+            }
+    return {"blocks": blocks, "index": ("cache_batch",)}
+
+
+# ----------------------------------------------------------------------
+# Forward
+# ----------------------------------------------------------------------
+
+def _attn_sublayer(h, p, cfg, positions, cache_in, mode):
+    b, s, d = h.shape
+    hd, nh, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    x = rms_norm(h, p["ln1"], cfg.norm_eps)
+    # keep sliced weights sharded INSIDE the layer scan so ZeRO-style
+    # rule sets all-gather per layer at the use point, never the whole
+    # stacked parameter array before the scan (HBM blow-up otherwise)
+    wq = shard(p["wq"], "embed", "heads")
+    wk = shard(p["wk"], "embed", "kv_heads")
+    wv = shard(p["wv"], "embed", "kv_heads")
+    q = jnp.einsum("bsd,de->bse", x, wq).reshape(b, s, nh, hd)
+    k = jnp.einsum("bsd,de->bse", x, wk).reshape(b, s, kvh, hd)
+    v = jnp.einsum("bsd,de->bse", x, wv).reshape(b, s, kvh, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+
+    new_cache = None
+    quant = cfg.kv_cache_dtype == "int8"
+    if mode == "decode":
+        kc, vc = cache_in["k"], cache_in["v"]
+        idx = positions[:, 0]
+        if quant:
+            kq, ks = _quantize_kv(k[:, 0])
+            vq, vs = _quantize_kv(v[:, 0])
+            kc = kc.at[jnp.arange(b), idx].set(kq)
+            vc = vc.at[jnp.arange(b), idx].set(vq)
+            kscale = cache_in["k_scale"].at[jnp.arange(b), idx].set(ks)
+            vscale = cache_in["v_scale"].at[jnp.arange(b), idx].set(vs)
+            k_full = _dequantize_kv(kc, kscale, k.dtype)
+            v_full = _dequantize_kv(vc, vscale, v.dtype)
+            new_cache = {"k": kc, "v": vc, "k_scale": kscale,
+                         "v_scale": vscale}
+        else:
+            kc = kc.at[jnp.arange(b), idx].set(k[:, 0])
+            vc = vc.at[jnp.arange(b), idx].set(v[:, 0])
+            k_full, v_full = kc, vc
+            new_cache = {"k": kc, "v": vc}
+        kv_pos = jnp.broadcast_to(jnp.arange(kc.shape[1], dtype=jnp.int32),
+                                  (b, kc.shape[1]))
+        out = attention(q, k_full, v_full, positions, kv_pos, causal=True)
+    else:
+        out = attention(q, k, v, positions, positions, causal=True)
+        if mode == "prefill":
+            if quant:
+                kq, ks = _quantize_kv(k)
+                vq, vs = _quantize_kv(v)
+                new_cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+            else:
+                new_cache = {"k": k, "v": v}
+    wo = shard(p["wo"], "heads", "embed")
+    out = jnp.einsum("bse,ed->bsd", out.reshape(b, s, nh * hd), wo)
+    return h + out, new_cache
+
+
+def _mamba_sublayer(h, p, cfg, cache_in, mode):
+    x = rms_norm(h, p["ln1"], cfg.norm_eps)
+    cache = None
+    if mode == "decode":
+        cache = MambaCache(conv=cache_in["conv"], ssm=cache_in["ssm"])
+    out, new_cache = mamba_mixer(
+        x, p, ssm_state=cfg.ssm_state, conv_width=cfg.conv_width,
+        dt_rank=cfg.dtr, cache=cache, return_cache=(mode == "prefill"))
+    nc = None
+    if new_cache is not None:
+        nc = {"conv": new_cache.conv, "ssm": new_cache.ssm}
+    elif mode == "decode":
+        nc = dict(cache_in)
+    return h + out, nc
+
+
+def _ffn_sublayer(h, p, cfg, kind):
+    x = rms_norm(h, p["ln2"], cfg.norm_eps)
+    if kind == "dense":
+        w_in = shard(p["w_in"], "embed", "mlp")
+        w_gate = shard(p["w_gate"], "embed", "mlp") if "w_gate" in p else None
+        w_out = shard(p["w_out"], "mlp", "embed")
+        out = mlp(x, w_in, w_gate, w_out, cfg.gated_ffn)
+    else:
+        exp = lambda w: shard(w, "experts", "expert_embed", "expert_mlp")
+        mp = MoEParams(
+            router=p["router"], w_in=exp(p["moe_w_in"]),
+            w_gate=exp(p.get("moe_w_gate", p["moe_w_in"])),
+            w_out=shard(p["moe_w_out"], "experts", "expert_mlp", "expert_embed"),
+            shared_w_in=p.get("shared_w_in"),
+            shared_w_gate=p.get("shared_w_gate"),
+            shared_w_out=p.get("shared_w_out"))
+        out = moe_ffn(x, mp, k=cfg.experts_per_token, n_experts=cfg.n_experts,
+                      group_size=cfg.moe_group_size,
+                      capacity_factor=cfg.capacity_factor, gated=cfg.gated_ffn)
+    return h + out
+
+
+def _period_block(h, bp, cache_in, positions, cfg: ModelConfig, mode: str):
+    cache_out = {}
+    for j in range(cfg.scan_period):
+        p = bp[f"L{j}"]
+        cin = cache_in.get(f"L{j}") if cache_in else None
+        if cfg.layer_kind(j) == "attn":
+            h, nc = _attn_sublayer(h, p, cfg, positions, cin, mode)
+        else:
+            h, nc = _mamba_sublayer(h, p, cfg, cin, mode)
+        if nc is not None:
+            cache_out[f"L{j}"] = nc
+        fk = cfg.ffn_kind(j)
+        if fk != "none":
+            h = _ffn_sublayer(h, p, cfg, fk)
+        h = shard(h, "batch", "seq", "embed_act")
+    return h, cache_out
+
+
+def forward(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,                     # [B, S] int32
+    *,
+    patches: Optional[jax.Array] = None,   # [B, P, d] (vlm early fusion)
+    cache: Optional[Dict] = None,
+    mode: str = "train",                   # train | prefill | decode
+    remat: str = "full",                   # full | none
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Returns (logits [B, S(, +P)…, V], new_cache or None)."""
+    assert mode in ("train", "prefill", "decode")
+    b, s = tokens.shape
+    h = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]
+    if patches is not None:
+        h = jnp.concatenate([patches.astype(h.dtype), h], axis=1)
+        s = h.shape[1]
+    h = shard(h, "batch", "seq", "embed_act")
+
+    if mode == "decode":
+        positions = cache["index"][:, None]                     # [B, 1]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    blocks = params["blocks"]
+    cache_blocks = cache["blocks"] if cache is not None else None
+
+    block_fn = functools.partial(_period_block, positions=positions,
+                                 cfg=cfg, mode=mode)
+    if remat == "full":
+        block_fn = jax.checkpoint(block_fn,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat == "dots":
+        block_fn = jax.checkpoint(
+            block_fn,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    def scan_body(carry, xs):
+        bp, cin = xs
+        h_out, cout = block_fn(carry, bp, cin)
+        return h_out, cout
+
+    if cache_blocks is None:
+        h, cache_ys = jax.lax.scan(
+            lambda c, bp: scan_body(c, (bp, None)), h, blocks)
+    else:
+        h, cache_ys = jax.lax.scan(scan_body, h, (blocks, cache_blocks))
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h,
+                            params["embed"].astype(h.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    logits = shard(logits, "batch", "seq", "vocab")
+
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {"blocks": cache_ys,
+                     "index": jnp.full((b,), s, dtype=jnp.int32)}
+    elif mode == "decode":
+        new_cache = {"blocks": cache_ys, "index": cache["index"] + 1}
+    return logits, new_cache

@@ -1,0 +1,71 @@
+"""Serving steps: prefill (prompt -> cache + first logits) and decode
+(one token against a fixed-size cache).  These are the functions the
+dry-run lowers for the ``prefill_*`` / ``decode_*`` / ``long_*`` cells.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import Model
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill(params, batch) -> Tuple[jax.Array, Dict]:
+        logits, cache = model.apply(params, batch, mode="prefill")
+        return logits[:, -1, :], cache
+    return prefill
+
+
+def make_decode_step(model: Model, sample: str = "greedy") -> Callable:
+    def decode(params, tokens, cache) -> Tuple[jax.Array, Dict]:
+        logits, cache = model.apply(params, {"tokens": tokens},
+                                    mode="decode", cache=cache)
+        if sample == "greedy":
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        else:
+            raise NotImplementedError(sample)
+        return nxt[:, None], cache
+    return decode
+
+
+def greedy_generate(model: Model, params, batch, max_new_tokens: int,
+                    max_seq: Optional[int] = None):
+    """Prefill + greedy decode loop (lax.scan over steps).
+
+    The cache is padded to ``max_seq`` so every decode step has identical
+    shapes (single compiled executable for the whole generation).
+    """
+    cfg = model.cfg
+    prompt = batch["tokens"]
+    b, sp = prompt.shape
+    max_seq = max_seq or (sp + max_new_tokens)
+
+    _, cache = model.apply(params, batch, mode="prefill")
+    # pad KV cache seq dim to max_seq (mamba/ssm leaves are size-invariant)
+    def pad(leaf):
+        if leaf.ndim >= 3 and leaf.shape[2] == sp + (cfg.vision_patches
+                                                     if cfg.family == "vlm" else 0):
+            w = [(0, 0)] * leaf.ndim
+            w[2] = (0, max_seq - leaf.shape[2])
+            return jnp.pad(leaf, w)
+        return leaf
+    cache = {"blocks": jax.tree.map(pad, cache["blocks"]),
+             "index": cache["index"]}
+
+    logits, _ = model.apply(params, batch, mode="prefill")
+    first = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+
+    decode = make_decode_step(model)
+
+    def body(carry, _):
+        tok, cache = carry
+        nxt, cache = decode(params, tok, cache)
+        return (nxt, cache), nxt[:, 0]
+
+    (_, _), toks = jax.lax.scan(body, (first, cache), None,
+                                length=max_new_tokens - 1)
+    out = jnp.concatenate([first, jnp.moveaxis(toks, 0, 1)], axis=1)
+    return out

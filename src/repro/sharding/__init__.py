@@ -1,0 +1,11 @@
+from .rules import (
+    RULE_SETS,
+    current_rules,
+    logical_to_spec,
+    shard,
+    shardings_from_axes,
+    use_rules,
+)
+
+__all__ = ["RULE_SETS", "current_rules", "logical_to_spec", "shard",
+           "shardings_from_axes", "use_rules"]

@@ -1,0 +1,65 @@
+"""Deterministic synthetic data pipeline.
+
+Every batch is a pure function of ``(seed, step)`` — after a checkpoint
+restart the pipeline replays identically (restart-exact training, the
+fault-tolerance contract of DESIGN.md §6).  Two generators:
+
+* ``synthetic_lm_batch`` — uniform random tokens (throughput/dry-run work);
+* ``copy_task_batch``   — second half of each sequence repeats the first
+  half; a small LM visibly learns it in a few hundred steps (the
+  end-to-end example's loss goes from ~ln(V) to near the copy floor).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeSpec
+
+
+def _key(seed: int, step) -> jax.Array:
+    return jax.random.fold_in(jax.random.PRNGKey(seed), step)
+
+
+def synthetic_lm_batch(cfg: ModelConfig, batch: int, seq: int, step,
+                       seed: int = 17) -> Dict[str, jax.Array]:
+    k = _key(seed, step)
+    return {"tokens": jax.random.randint(k, (batch, seq), 0, cfg.vocab_size,
+                                         dtype=jnp.int32)}
+
+
+def copy_task_batch(cfg: ModelConfig, batch: int, seq: int, step,
+                    seed: int = 17) -> Dict[str, jax.Array]:
+    half = seq // 2
+    k = _key(seed, step)
+    first = jax.random.randint(k, (batch, half), 2, cfg.vocab_size,
+                               dtype=jnp.int32)
+    toks = jnp.concatenate([first, first], axis=1)
+    if toks.shape[1] < seq:
+        toks = jnp.pad(toks, ((0, 0), (0, seq - toks.shape[1])), constant_values=1)
+    return {"tokens": toks}
+
+
+def make_batch_for(cfg: ModelConfig, shape: ShapeSpec, step, seed: int = 17,
+                   task: str = "lm") -> Dict[str, jax.Array]:
+    """Family-aware batch construction matching ``Model.input_specs``."""
+    gen = copy_task_batch if task == "copy" else synthetic_lm_batch
+    b, s = shape.global_batch, shape.seq_len
+    k = _key(seed + 1, step)
+    if cfg.family == "audio":
+        sd = max(s // 8, 8)
+        return {
+            "frames": jax.random.normal(k, (b, s, cfg.d_model), jnp.float32)
+            .astype(jnp.dtype(cfg.dtype)),
+            "tokens": gen(cfg, b, sd, step, seed)["tokens"],
+        }
+    if cfg.family == "vlm":
+        p = cfg.vision_patches
+        return {
+            "tokens": gen(cfg, b, s - p, step, seed)["tokens"],
+            "patches": jax.random.normal(k, (b, p, cfg.d_model), jnp.float32)
+            .astype(jnp.dtype(cfg.dtype)),
+        }
+    return gen(cfg, b, s, step, seed)

@@ -1,0 +1,117 @@
+"""AdamW (decoupled weight decay) with distributed-scale options:
+
+* configurable optimizer-state dtype (fp32 default; bf16 halves the
+  per-chip optimizer footprint for the 400B-class archs — §Perf knob);
+* optional gradient compression with error feedback (bf16 cast before the
+  cross-replica reduction; the feedback buffer keeps the quantization
+  error from accumulating) — the paper-era "distributed optimization
+  trick" hook (DESIGN.md §6);
+* cosine LR schedule with linear warmup.
+
+Pure-functional: state is a pytree, update is jit-safe, nothing here
+touches devices directly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "float32"
+    grad_compression: str = "none"      # none | bf16_ef
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+    ef: Optional[dict]                  # error-feedback buffers (compression)
+
+
+def cosine_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def adamw_init(params, cfg: AdamWConfig) -> AdamWState:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    ef = None
+    if cfg.grad_compression == "bf16_ef":
+        ef = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        ef=ef,
+    )
+
+
+def _compress(grads, ef):
+    """bf16 gradient compression with error feedback."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        gq = gf.astype(jnp.bfloat16).astype(jnp.float32)
+        return gq, gf - gq
+    pairs = jax.tree.map(one, grads, ef)
+    comp = jax.tree.map(lambda p: p[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda p: p[1], pairs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return comp, new_ef
+
+
+def adamw_update(
+    grads, state: AdamWState, params, cfg: AdamWConfig,
+) -> Tuple[dict, AdamWState, jax.Array]:
+    """Returns (new_params, new_state, lr)."""
+    step = state.step + 1
+    lr = cosine_lr(cfg, step)
+    new_ef = state.ef
+    if cfg.grad_compression == "bf16_ef":
+        grads, new_ef = _compress(grads, state.ef)
+
+    b1, b2 = cfg.b1, cfg.b2
+    sdt = jnp.dtype(cfg.state_dtype)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(g)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        newp = p.astype(jnp.float32) - lr * (delta + decay)
+        return newp.astype(p.dtype), m32.astype(sdt), v32.astype(sdt)
+
+    triples = jax.tree.map(upd, params, grads, state.m, state.v)
+    pick = lambda i: jax.tree.map(lambda t: t[i], triples,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    new_params, new_m, new_v = pick(0), pick(1), pick(2)
+    return new_params, AdamWState(step=step, m=new_m, v=new_v, ef=new_ef), lr
+
+
+def opt_state_logical_axes(param_axes, cfg: AdamWConfig):
+    """Optimizer state shards exactly like its parameters (ZeRO-style)."""
+    ef = param_axes if cfg.grad_compression == "bf16_ef" else None
+    return AdamWState(step=(), m=param_axes, v=param_axes, ef=ef)

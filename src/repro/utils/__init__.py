@@ -1,0 +1,3 @@
+from .sysinfo import rss_mb, Timer
+
+__all__ = ["rss_mb", "Timer"]

@@ -1,0 +1,41 @@
+"""Process self-measurement without psutil (offline container).
+
+The paper samples memory with psutil every 10 ms; we read the same VmRSS
+quantity straight from ``/proc/self/status``.
+"""
+from __future__ import annotations
+
+import time
+
+
+def rss_mb() -> float:
+    """Resident set size of this process in MB (VmRSS)."""
+    try:
+        with open("/proc/self/status") as fh:
+            for line in fh:
+                if line.startswith("VmRSS:"):
+                    return float(line.split()[1]) / 1024.0
+    except OSError:
+        pass
+    return 0.0
+
+
+class Timer:
+    """Accumulating wall-clock timer with context-manager splits."""
+
+    def __init__(self) -> None:
+        self.total = 0.0
+        self.count = 0
+        self._t0 = 0.0
+
+    def __enter__(self) -> "Timer":
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.total += time.perf_counter() - self._t0
+        self.count += 1
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0

@@ -1,0 +1,4 @@
+from .swf import SWFReader, SWFWriter
+from .reader import Reader, WorkloadWriter
+
+__all__ = ["SWFReader", "SWFWriter", "Reader", "WorkloadWriter"]

@@ -1,0 +1,137 @@
+"""Cluster fusion layer: failure injection/re-queue, fault-aware
+scheduling, elastic scaling, straggler detection, profile loading."""
+import json
+import os
+import random
+
+import numpy as np
+import pytest
+
+from repro.cluster import (ElasticScaler, FailureInjector,
+                           FaultAwareScheduler, JobProfile, StragglerMonitor,
+                           TPUJobFactory, profile_from_dryrun,
+                           tpu_cluster_config)
+from repro.cluster.failures import CheckpointRestartPolicy
+from repro.core import Job, NodeFailureModel, Simulator
+from repro.core.dispatchers import EasyBackfilling, FirstFit, FirstInFirstOut
+
+
+def make_profiles():
+    return {
+        "qwen3-1.7b/train_4k": JobProfile(
+            key="qwen3-1.7b/train_4k", arch="qwen3-1.7b", shape="train_4k",
+            kind="train", chips=256, step_time_s=2.0, dominant="memory",
+            hbm_bytes_per_chip=6e9, flops_per_chip=4e13,
+            useful_flops_ratio=0.6),
+        "smollm-360m/decode_32k": JobProfile(
+            key="smollm-360m/decode_32k", arch="smollm-360m",
+            shape="decode_32k", kind="decode", chips=64, step_time_s=0.05,
+            dominant="memory", hbm_bytes_per_chip=2e9, flops_per_chip=1e11,
+            useful_flops_ratio=0.2),
+    }
+
+
+def test_tpu_cluster_jobs_schedule(tmp_path):
+    profiles = make_profiles()
+    factory = TPUJobFactory(profiles)
+    jobs = [factory.make_job("qwen3-1.7b/train_4k", submit_time=i * 200,
+                             steps=100 + 10 * i, user=i % 3)
+            for i in range(10)]
+    jobs += [factory.make_job("smollm-360m/decode_32k", submit_time=i * 300,
+                              steps=2000) for i in range(5)]
+    jobs.sort(key=lambda j: j.submission_time)
+    sim = Simulator(jobs, tpu_cluster_config(n_pods=2),
+                    EasyBackfilling(FirstFit()), output_dir=str(tmp_path))
+    sim.start_simulation()
+    assert sim.summary["completed"] == 15
+
+
+def test_failure_injection_requeues(tmp_path):
+    """A node failure mid-run re-queues the victim job; it completes."""
+    jobs = [Job(id="j", user_id=0, submission_time=0, duration=1000,
+                expected_duration=1000, requested_nodes=2,
+                requested_resources={"chip": 4, "hbm_gib": 64})]
+    trace = [(500, 0, "fail")]          # node 0 dies at t=500
+    fm = NodeFailureModel(trace)
+    sim = Simulator(jobs, tpu_cluster_config(n_pods=1, hosts_per_pod=4),
+                    FirstInFirstOut(FirstFit()), output_dir=str(tmp_path))
+    sim.start_simulation(additional_data=[fm])
+    assert fm.requeued_jobs == 1
+    assert sim.summary["completed"] == 1
+    # restarted away from the dead node
+    em = sim.event_manager
+
+
+def test_checkpoint_restart_policy():
+    job = Job(id="t", user_id=0, submission_time=0, duration=1000,
+              expected_duration=1200, requested_nodes=1,
+              requested_resources={"chip": 4})
+    pol = CheckpointRestartPolicy(ckpt_every_s=300)
+    pol.on_requeue(job, ran_for_s=650)   # 2 checkpoints -> 600s saved
+    assert job.duration == 400
+    assert job.attrs["restarts"] == 1
+
+
+def test_fault_aware_scheduler_avoids_quarantined(tmp_path):
+    from repro.core import EventManager, ResourceManager
+    rm = ResourceManager(tpu_cluster_config(n_pods=1, hosts_per_pod=4))
+    job = Job(id="a", user_id=0, submission_time=0, duration=10,
+              expected_duration=10, requested_nodes=2,
+              requested_resources={"chip": 4})
+    em = EventManager(iter([job]), rm)
+    em.advance_to(0)
+    sched = FaultAwareScheduler(FirstInFirstOut(FirstFit()))
+    sched.note_failure(0, 0)
+    sched.note_failure(0, 1)
+    to_start, _ = sched.schedule(0, em.queue, em)
+    assert len(to_start) == 1
+    nodes = to_start[0][1]
+    assert 0 not in nodes and 1 not in nodes
+
+
+def test_failure_injector_deterministic():
+    a = FailureInjector(8, mtbf_s=5000, repair_s=600, horizon_s=50000, seed=4)
+    b = FailureInjector(8, mtbf_s=5000, repair_s=600, horizon_s=50000, seed=4)
+    assert a.trace() == b.trace()
+    assert len(a.trace()) > 0
+
+
+def test_elastic_scaler_shrinks_under_pressure():
+    profiles = make_profiles()
+    factory = TPUJobFactory(profiles)
+    scaler = ElasticScaler(profiles, min_hosts=4, deep_queue=2)
+    job = factory.make_job("qwen3-1.7b/train_4k", 0, steps=100)
+    want = job.requested_nodes
+    d0 = job.duration
+    out = scaler.admit(job, queue_depth=5, free_hosts=8)
+    assert out.requested_nodes == 8 < want
+    assert out.duration > d0            # fewer chips -> longer job
+    assert scaler.shrunk == 1
+
+
+def test_straggler_monitor_detects_slow_host():
+    mon = StragglerMonitor(slow_threshold=1.2, min_samples=2)
+    rng = random.Random(0)
+    for i in range(8):
+        j = Job(id=str(i), user_id=0, submission_time=0, duration=100,
+                expected_duration=100, requested_nodes=1,
+                requested_resources={"chip": 1})
+        j.start_time = 0
+        slow = (i % 2 == 0)
+        j.end_time = 150 if slow else 100
+        j.assigned_nodes = [3] if slow else [7]
+        mon.observe(j, expected_duration=100)
+    assert mon.stragglers() == [3]
+
+
+def test_profile_from_dryrun_record():
+    rec = {
+        "ok": True, "arch": "x", "shape": "train_4k", "chips": 256,
+        "roofline": {"bound_step_time_s": 1.5, "dominant": "compute",
+                     "model_flops_per_chip": 1e12,
+                     "useful_flops_ratio": 0.5},
+        "memory": {"per_device_bytes": 5e9},
+    }
+    p = profile_from_dryrun(rec)
+    assert p.kind == "train" and p.step_time_s == 1.5 and p.chips == 256
+    assert profile_from_dryrun({"ok": False}) is None

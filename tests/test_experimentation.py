@@ -1,0 +1,84 @@
+"""Experimentation tools: Experiment automation, PlotFactory, metrics,
+and the HLO cost analyzer's known-cost validation."""
+import os
+import random
+
+import pytest
+
+from repro.core import Job
+from repro.core.dispatchers import (BestFit, FirstFit, FirstInFirstOut,
+                                    ShortestJobFirst)
+from repro.experimentation import Experiment, PlotFactory, metrics
+
+SYS = {"groups": {"compute": {"core": 4, "mem": 1024}}, "nodes": {"compute": 8}}
+
+
+def make_jobs(n=120, seed=2):
+    rng = random.Random(seed)
+    return [Job(id=str(i), user_id=1, submission_time=i * 11,
+                duration=rng.randint(10, 400),
+                expected_duration=rng.randint(10, 500),
+                requested_nodes=rng.randint(1, 2),
+                requested_resources={"core": rng.randint(1, 4),
+                                     "mem": rng.randint(64, 512)})
+            for i in range(n)]
+
+
+def test_experiment_cross_product_and_plots(tmp_path):
+    exp = Experiment("exp1", make_jobs(), SYS, output_dir=str(tmp_path))
+    exp.gen_dispatchers([FirstInFirstOut, ShortestJobFirst],
+                        [FirstFit, BestFit])
+    assert len(exp.dispatchers) == 4
+    results = exp.run_simulation(produce_plots=True)
+    assert set(results) == {"FIFO-FF", "FIFO-BF", "SJF-FF", "SJF-BF"}
+    for kind in ("slowdown", "queue_size", "dispatch_time"):
+        assert os.path.exists(os.path.join(str(tmp_path), "exp1",
+                                           f"plot_{kind}.png"))
+    assert os.path.exists(os.path.join(str(tmp_path), "exp1",
+                                       "summaries.json"))
+
+
+def test_metrics_pipeline(tmp_path):
+    exp = Experiment("exp2", make_jobs(80), SYS, output_dir=str(tmp_path))
+    exp.gen_dispatchers([FirstInFirstOut], [FirstFit])
+    res = exp.run_simulation(produce_plots=False)
+    out = res["FIFO-FF"]["output"]
+    bench = res["FIFO-FF"]["bench"]
+    sl = metrics.slowdowns(out)
+    assert len(sl) == 80 and all(s >= 1.0 for s in sl)
+    series = metrics.bench_series(bench)
+    assert series["summary"]["completed"] == 80
+    pts = metrics.dispatch_time_by_queue_size(bench)
+    assert pts and all(c > 0 for _, _, c in pts)
+    pct = metrics.percentiles(sl)
+    assert pct["p50"] <= pct["p95"] <= pct["max"]
+
+
+def test_plot_factory_group_validation(tmp_path):
+    pf = PlotFactory("decision", SYS)
+    with pytest.raises(ValueError):
+        pf.produce_plot("dispatch_time")   # performance plot, wrong group
+
+
+def test_hlo_analyzer_known_costs():
+    """The scan-corrected analyzer must reproduce hand-computable costs
+    (the foundation of §Roofline)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.hlo_analysis import analyze_hlo_text
+
+    M, N, K, L = 64, 96, 32, 5
+    txt = jax.jit(lambda a, b: a @ b).lower(
+        jax.ShapeDtypeStruct((M, K), jnp.float32),
+        jax.ShapeDtypeStruct((K, N), jnp.float32)).compile().as_text()
+    t = analyze_hlo_text(txt)
+    assert abs(t.flops - 2 * M * N * K) / (2 * M * N * K) < 0.02
+
+    def step(c, w):
+        return c @ w, ()
+    txt = jax.jit(lambda c, ws: jax.lax.scan(step, c, ws)[0]).lower(
+        jax.ShapeDtypeStruct((M, M), jnp.float32),
+        jax.ShapeDtypeStruct((L, M, M), jnp.float32)).compile().as_text()
+    t = analyze_hlo_text(txt)
+    exp = 2 * M * M * M * L
+    assert abs(t.flops - exp) / exp < 0.02, "while trip-count correction"

@@ -1,0 +1,90 @@
+"""Workload generator: fidelity of the mimicked distributions (paper
+§7.3, Figs. 14-17) at test scale."""
+import math
+import os
+
+import pytest
+
+from repro.generator import WorkloadGenerator
+from repro.workloads import SWFReader, SWFWriter
+
+SYS = {"groups": {"compute": {"core": 4, "mem": 1024}}, "nodes": {"compute": 16}}
+
+
+@pytest.fixture(scope="module")
+def real_swf(tmp_path_factory):
+    """A synthetic 'real' trace with a clear daily cycle (working hours)."""
+    import random
+    rng = random.Random(5)
+    recs = []
+    t = 0
+    for i in range(3000):
+        # submissions cluster in 8h-18h
+        t += int(rng.expovariate(1 / 180.0))
+        hour = (t // 3600) % 24
+        if not (8 <= hour <= 18) and rng.random() < 0.8:
+            t += 3600 * 4
+        procs = rng.choice([1, 1, 1, 2, 4, 8, 16])
+        recs.append({"id": i + 1, "submit": t,
+                     "duration": rng.randint(60, 7200),
+                     "expected_duration": rng.randint(60, 9000),
+                     "requested_processors": procs,
+                     "requested_memory": rng.randint(64, 1024),
+                     "user": rng.randint(1, 20), "status": 1})
+    p = str(tmp_path_factory.mktemp("gen") / "real.swf")
+    SWFWriter().write(iter(recs), p)
+    return p
+
+
+def test_generator_produces_sorted_valid_jobs(real_swf, tmp_path):
+    gen = WorkloadGenerator(real_swf, SYS, {"core": 1.667},
+                            {"min": {"core": 1, "mem": 64},
+                             "max": {"core": 4, "mem": 1024}}, seed=3)
+    out = os.path.join(str(tmp_path), "synthetic.swf")
+    jobs = gen.generate_jobs(2000, out)
+    assert len(jobs) == 2000
+    subs = [j["submit"] for j in jobs]
+    assert subs == sorted(subs)
+    assert all(j["duration"] >= 1 for j in jobs)
+    assert all(1 <= j["requested_processors"] for j in jobs)
+    back = list(SWFReader(out))
+    assert len(back) == 2000
+
+
+def test_generator_mimics_daily_cycle(real_swf):
+    """Hourly submission shares of the generated workload correlate with
+    the real trace (paper Fig. 14)."""
+    gen = WorkloadGenerator(real_swf, SYS, {"core": 1.667},
+                            {"min": {"core": 1, "mem": 64},
+                             "max": {"core": 4, "mem": 1024}}, seed=7)
+    jobs = gen.generate_jobs(4000)
+
+    def hourly(ts):
+        h = [0] * 24
+        for t in ts:
+            h[(t // 3600) % 24] += 1
+        tot = sum(h)
+        return [c / tot for c in h]
+
+    real = gen.hour_ratio
+    synth = hourly([j["submit"] for j in jobs])
+    # Pearson correlation between the 24 shares
+    mr = sum(real) / 24
+    ms = sum(synth) / 24
+    num = sum((a - mr) * (b - ms) for a, b in zip(real, synth))
+    den = math.sqrt(sum((a - mr) ** 2 for a in real)
+                    * sum((b - ms) ** 2 for b in synth))
+    corr = num / den if den else 0.0
+    assert corr > 0.5, f"hourly-cycle correlation too low: {corr:.2f}"
+
+
+def test_generator_work_distribution(real_swf):
+    """Generated FLOP budgets follow the fitted log-normal (paper Fig. 16):
+    log-mean within 1 sigma of the real fit."""
+    gen = WorkloadGenerator(real_swf, SYS, {"core": 1.667},
+                            {"min": {"core": 1, "mem": 64},
+                             "max": {"core": 4, "mem": 1024}}, seed=11)
+    jobs = gen.generate_jobs(3000)
+    logs = [math.log(j["work_gflop"]) for j in jobs]
+    mu = sum(logs) / len(logs)
+    assert abs(mu - gen.work_mu) < gen.work_sigma

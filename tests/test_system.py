@@ -1,0 +1,118 @@
+"""End-to-end behaviour tests of the AccaSim core (paper §3)."""
+import json
+import random
+
+import pytest
+
+from repro.core import Job, JobState, Simulator
+from repro.core.dispatchers import (BestFit, EasyBackfilling, FirstFit,
+                                    FirstInFirstOut, LongestJobFirst,
+                                    RejectAll, ShortestJobFirst)
+
+SYS = {"groups": {"compute": {"core": 4, "mem": 1024}}, "nodes": {"compute": 8}}
+
+
+def make_jobs(n=200, seed=0, max_nodes=3):
+    rng = random.Random(seed)
+    return [Job(id=str(i), user_id=1, submission_time=i * 7,
+                duration=rng.randint(10, 500),
+                expected_duration=rng.randint(10, 600),
+                requested_nodes=rng.randint(1, max_nodes),
+                requested_resources={"core": rng.randint(1, 4),
+                                     "mem": rng.randint(64, 1024)})
+            for i in range(n)]
+
+
+@pytest.mark.parametrize("sched_cls,alloc", [
+    (FirstInFirstOut, FirstFit()),
+    (ShortestJobFirst, FirstFit()),
+    (LongestJobFirst, BestFit()),
+    (EasyBackfilling, FirstFit()),
+    (EasyBackfilling, BestFit()),
+])
+def test_all_jobs_complete(tmp_path, sched_cls, alloc):
+    sim = Simulator(make_jobs(), SYS, sched_cls(alloc),
+                    output_dir=str(tmp_path))
+    out = sim.start_simulation()
+    assert sim.summary["completed"] == 200
+    assert sim.summary["rejected"] == 0
+    # output file has one record per job
+    recs = [json.loads(l) for l in open(out)]
+    assert len(recs) == 200
+    for r in recs:
+        assert r["state"] == "COMPLETED"
+        assert r["end"] - r["start"] == r["duration"]
+        assert r["start"] >= r["submit"]
+        assert len(set(r["assigned"])) == r["nodes"]
+
+
+def test_reject_all(tmp_path):
+    sim = Simulator(make_jobs(50), SYS, RejectAll(), output_dir=str(tmp_path))
+    sim.start_simulation()
+    assert sim.summary["rejected"] == 50
+    assert sim.summary["completed"] == 0
+
+
+def test_impossible_job_rejected(tmp_path):
+    jobs = [Job(id="too-big", user_id=1, submission_time=0, duration=10,
+                expected_duration=10, requested_nodes=1,
+                requested_resources={"core": 99})]
+    sim = Simulator(jobs, SYS, FirstInFirstOut(FirstFit()),
+                    output_dir=str(tmp_path))
+    sim.start_simulation()
+    assert sim.summary["rejected"] == 1
+
+
+def test_ebf_not_worse_than_fifo_makespan(tmp_path):
+    """EASY backfilling should not lengthen the schedule (and typically
+    shortens it) vs plain FIFO on the same workload."""
+    r = {}
+    for name, sched in [("fifo", FirstInFirstOut(FirstFit())),
+                        ("ebf", EasyBackfilling(FirstFit()))]:
+        sim = Simulator(make_jobs(300, seed=3), SYS, sched,
+                        output_dir=str(tmp_path), name=name)
+        sim.start_simulation(write_output=False)
+        r[name] = sim.summary["sim_end_time"]
+    assert r["ebf"] <= r["fifo"]
+
+
+def test_dispatch_time_tracked(tmp_path):
+    sim = Simulator(make_jobs(100), SYS, EasyBackfilling(BestFit()),
+                    output_dir=str(tmp_path))
+    sim.start_simulation()
+    assert sim.summary["dispatch_time_s"] > 0
+    assert sim.summary["dispatch_time_s"] < sim.summary["wall_time_s"] + 1
+
+
+def test_monitors_and_additional_data(tmp_path):
+    from repro.core import PowerModel
+    pm = PowerModel({"core": 10.0}, idle_node_watts=5.0)
+    sim = Simulator(make_jobs(100), SYS, FirstInFirstOut(FirstFit()),
+                    output_dir=str(tmp_path))
+    sim.start_simulation(system_status=True, system_utilization=True,
+                         additional_data=[pm])
+    assert pm.energy_joules > 0
+    um = sim.utilization_monitor
+    assert len(um.times) > 0
+    assert sim.last_status["cpu_time_s"] >= 0
+
+
+def test_incremental_loading_memory_flat(tmp_path):
+    """Paper Table 1 property: memory stays ~flat with workload size
+    thanks to incremental loading + completed-job removal."""
+    from repro.utils import rss_mb
+
+    def run(n):
+        sim = Simulator(iter(make_jobs(n, seed=1)), SYS, RejectAll(),
+                        output_dir=str(tmp_path), lookahead_jobs=256)
+        sim.start_simulation(write_output=False)
+        return sim.summary
+
+    base = rss_mb()
+    run(1000)
+    m1 = rss_mb()
+    run(20000)
+    m2 = rss_mb()
+    # 20x jobs must not cost 20x memory; allow generous slack for the
+    # allocator noise of the test process itself.
+    assert m2 - base < max(5 * (m1 - base + 1), 60)

@@ -1,10 +1,16 @@
 """Benchmark orchestrator — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only table1,table2,...]
+    PYTHONPATH=src python -m benchmarks.run --quick     # dispatch only
 
 Prints ``name,us_per_call,derived`` CSV lines (emit contract) and writes
 JSON + plots under results/bench/.  BENCH_SCALE scales workload sizes
 (1.0 default ~ minutes; 11 reproduces paper-scale MetaCentrum).
+
+``--quick`` runs a small queue×node sweep of the batched-dispatch
+benchmark only and writes ``BENCH_dispatch.json`` at the repo root
+(events/s, kernel launches/event, dispatch_time_s) — the perf-trajectory
+seed for the DispatchContext/DispatchPlan path.
 """
 from __future__ import annotations
 
@@ -13,14 +19,24 @@ import sys
 import time
 import traceback
 
-MODULES = ["table1", "table2", "fig_generator", "kernels", "roofline"]
+MODULES = ["table1", "table2", "fig_generator", "kernels", "dispatch",
+           "roofline"]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all")
     ap.add_argument("--out", default="results/bench")
+    ap.add_argument("--quick", action="store_true",
+                    help="small dispatch-only sweep -> BENCH_dispatch.json")
     args = ap.parse_args()
+    if args.quick:
+        from . import bench_dispatch
+        print("name,us_per_call,derived")
+        result = bench_dispatch.run(args.out, quick=True)
+        print(f"# dispatch quick: {result['speedup_batched_vs_per_job']}x "
+              f"batched vs per-job on {result['headline']}", file=sys.stderr)
+        return
     chosen = MODULES if args.only == "all" else args.only.split(",")
 
     print("name,us_per_call,derived")
@@ -40,6 +56,9 @@ def main() -> None:
             elif name == "kernels":
                 from . import bench_kernels
                 bench_kernels.run(args.out)
+            elif name == "dispatch":
+                from . import bench_dispatch
+                bench_dispatch.run(args.out)
             elif name == "roofline":
                 from . import roofline
                 roofline.run(args.out)

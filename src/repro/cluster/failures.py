@@ -17,7 +17,8 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.dispatchers.base import Decision, SchedulerBase
+from ..core.dispatchers.base import SchedulerBase
+from ..core.dispatchers.context import DispatchContext, DispatchPlan
 from ..core.job import Job
 
 
@@ -80,14 +81,17 @@ class FaultAwareScheduler(SchedulerBase):
                                  if now - t < self.quarantine_s]
         return [n for _, n in self._recent_failures]
 
-    def schedule(self, now, queue, event_manager) -> Decision:
-        rm = event_manager.rm
-        bad = self.quarantined(now)
-        if not bad:
-            return self.inner.schedule(now, queue, event_manager)
-        saved = rm.available[bad].copy()
-        rm.available[bad] = 0                  # mask, delegate, unmask
-        try:
-            return self.inner.schedule(now, queue, event_manager)
-        finally:
-            rm.available[bad] = saved
+    def reset(self) -> None:
+        super().reset()
+        self.inner.reset()
+        self._recent_failures.clear()
+
+    def plan(self, ctx: DispatchContext) -> DispatchPlan:
+        bad = self.quarantined(ctx.now)
+        if bad:
+            # pure context rewrite: quarantined nodes look exhausted to
+            # the wrapped planner (no mutation of the resource manager)
+            masked = ctx.avail.copy()
+            masked[bad] = 0
+            ctx = ctx.replace(avail=masked)
+        return self.inner.plan(ctx)

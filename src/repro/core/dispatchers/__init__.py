@@ -1,3 +1,4 @@
+from .context import DispatchContext, DispatchPlan, ReleaseEvent
 from .base import AllocatorBase, SchedulerBase, Dispatcher
 from .allocators import FirstFit, BestFit
 from .schedulers import (
@@ -13,7 +14,15 @@ from .advanced import (
     EnergyCappedScheduler,
 )
 
+# NOTE: the vectorized engine (BatchProbe, VectorizedAllocator,
+# VectorizedEasyBackfilling) lives in ``.vectorized`` and is imported
+# explicitly by its users — pulling it in here would make every
+# numpy-only simulation pay the JAX import cost.
+
 __all__ = [
+    "DispatchContext",
+    "DispatchPlan",
+    "ReleaseEvent",
     "AllocatorBase",
     "SchedulerBase",
     "Dispatcher",

@@ -13,14 +13,22 @@ the current system status", §1; data-driven dispatching per [14]).
 * :class:`EnergyCappedScheduler` — wraps any scheduler and defers
   dispatch of jobs that would push the PowerModel's additional-data
   estimate past a configurable cap (the paper's power-aware example).
+
+All three showcase the batched protocol's composability: aging is a sort
+over ``ctx`` arrays, walltime correction is a *context rewrite*
+(``ctx.replace(est=..., releases=...)`` — no mutation of Job objects),
+and the energy cap is a *plan rewrite* (trim another scheduler's plan).
 """
 from __future__ import annotations
 
 from collections import defaultdict
 from typing import Dict, List, Optional, Sequence
 
+import numpy as np
+
 from ..job import Job
-from .base import Decision, SchedulerBase
+from .base import SchedulerBase
+from .context import DispatchContext, DispatchPlan, ReleaseEvent
 from .schedulers import EasyBackfilling
 
 
@@ -34,13 +42,13 @@ class PriorityAging(SchedulerBase):
         super().__init__(allocator)
         self.age_weight = age_weight
 
-    def schedule(self, now, queue, event_manager) -> Decision:
-        def key(j: Job):
-            base = float(j.attrs.get("priority", 0))
-            age = (now - (j.queued_time or now)) * self.age_weight
+    def plan(self, ctx: DispatchContext) -> DispatchPlan:
+        def key(i: int):
+            base = float(ctx.jobs[i].attrs.get("priority", 0))
+            age = (ctx.now - int(ctx.queued_time[i])) * self.age_weight
             return -(base + age)
-        ordered = sorted(queue, key=key)
-        return self._greedy(ordered, event_manager, blocking=True)
+        order = sorted(range(ctx.n_queued), key=key)
+        return self._greedy_plan(ctx, order, blocking=True)
 
 
 class WalltimeCorrectedEBF(EasyBackfilling):
@@ -51,7 +59,9 @@ class WalltimeCorrectedEBF(EasyBackfilling):
     its user's historical ratio (floored to keep estimates admissible).
     The event manager still uses true durations for completions — only
     the *dispatching decision* sees corrected estimates, mirroring the
-    paper's separation.
+    paper's separation.  Correction is a pure context rewrite: queue
+    estimates and running-job release times are replaced in a derived
+    ``DispatchContext`` before the standard EBF plan runs.
     """
 
     name = "dEBF"
@@ -63,6 +73,11 @@ class WalltimeCorrectedEBF(EasyBackfilling):
         self.blend = blend
         self._sum: Dict[int, float] = defaultdict(float)
         self._cnt: Dict[int, int] = defaultdict(int)
+
+    def reset(self) -> None:
+        super().reset()
+        self._sum.clear()
+        self._cnt.clear()
 
     # -- online model ---------------------------------------------------
     def observe_completion(self, job: Job) -> None:
@@ -82,23 +97,17 @@ class WalltimeCorrectedEBF(EasyBackfilling):
         return max(int(job.expected_duration * ratio), 1)
 
     # -- plug corrected estimates into the EBF machinery -----------------
-    def schedule(self, now, queue, event_manager) -> Decision:
-        patched: List = []
-        for j in queue:
-            orig = j.expected_duration
-            j.expected_duration = self.corrected(j)
-            patched.append((j, orig))
-        # running jobs' releases also use corrected estimates
-        running_patch = []
-        for j in event_manager.running.values():
-            orig = j.expected_duration
-            j.expected_duration = self.corrected(j)
-            running_patch.append((j, orig))
-        try:
-            return super().schedule(now, queue, event_manager)
-        finally:
-            for j, orig in patched + running_patch:
-                j.expected_duration = orig
+    def plan(self, ctx: DispatchContext) -> DispatchPlan:
+        est = np.array([self.corrected(j) for j in ctx.jobs],
+                       dtype=np.int64).reshape(ctx.est.shape)
+        releases = []
+        for ev in ctx.releases:
+            job = ev.job
+            t = max(job.start_time + self.corrected(job), ctx.now + 1)
+            releases.append(ReleaseEvent(time=int(t), nodes=ev.nodes,
+                                         vec=ev.vec, job=job))
+        releases.sort(key=lambda ev: ev.time)
+        return super().plan(ctx.replace(est=est, releases=tuple(releases)))
 
 
 class EnergyCappedScheduler(SchedulerBase):
@@ -106,8 +115,8 @@ class EnergyCappedScheduler(SchedulerBase):
 
     Consumes the PowerModel additional-data view: estimates each
     candidate job's marginal power as Σ(request · watts) and trims the
-    decision so projected power stays under ``cap_watts`` (paper's
-    power-aware dispatching example, refs [5, 6, 37])."""
+    inner scheduler's plan so projected power stays under ``cap_watts``
+    (paper's power-aware dispatching example, refs [5, 6, 37])."""
 
     name = "ECAP"
 
@@ -121,10 +130,15 @@ class EnergyCappedScheduler(SchedulerBase):
         self.idle = idle_node_watts
         self.deferred = 0
 
-    def _power_now(self, rm) -> float:
-        used = (rm.capacity - rm.available).sum(axis=0)
-        p = self.idle * rm.n_nodes
-        for i, rt in enumerate(rm.resource_types):
+    def reset(self) -> None:
+        super().reset()
+        self.inner.reset()
+        self.deferred = 0
+
+    def _power_now(self, ctx: DispatchContext) -> float:
+        used = (ctx.capacity - ctx.avail).sum(axis=0)
+        p = self.idle * ctx.capacity.shape[0]
+        for i, rt in enumerate(ctx.resource_types):
             p += self.watts.get(rt, 0.0) * float(used[i])
         return p
 
@@ -132,15 +146,17 @@ class EnergyCappedScheduler(SchedulerBase):
         return sum(self.watts.get(rt, 0.0) * q * job.requested_nodes
                    for rt, q in job.requested_resources.items())
 
-    def schedule(self, now, queue, event_manager) -> Decision:
-        to_start, to_reject = self.inner.schedule(now, queue, event_manager)
-        budget = self.cap - self._power_now(event_manager.rm)
+    def plan(self, ctx: DispatchContext) -> DispatchPlan:
+        plan = self.inner.plan(ctx)
+        budget = self.cap - self._power_now(ctx)
         kept = []
-        for job, nodes in to_start:
+        for job, nodes in plan.starts:
             need = self._job_power(job)
             if need <= budget:
                 kept.append((job, nodes))
                 budget -= need
             else:
                 self.deferred += 1
-        return kept, to_reject
+                plan.skips[job.id] = "power-cap"
+        plan.starts = kept
+        return plan

@@ -3,24 +3,41 @@
 A *dispatcher* = scheduler ∘ allocator.  The scheduler decides WHICH queued
 jobs run next; the allocator decides WHERE (which nodes).  Both are
 customizable by subclassing — the paper's extension mechanism.
+
+Batched protocol (DESIGN.md §1): the Simulator builds one frozen
+:class:`~.context.DispatchContext` per event point and calls
+``SchedulerBase.plan(ctx) -> DispatchPlan``.  Schedulers express policy as
+an *order* over queue indices and hand the whole batch to
+``AllocatorBase.allocate_batch``, whose vectorized override scores every
+(job, node) pair in a single Pallas launch.  The legacy per-job entry
+points (``schedule`` / ``find_nodes`` / ``allocate``) remain as thin
+compatibility shims so existing subclasses keep working.
 """
 from __future__ import annotations
 
 import abc
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..job import Job
 from ..resources import ResourceManager
+from .context import DispatchContext, DispatchPlan
 
-# A dispatching decision: (job, node ids) pairs ready to start now,
-# plus optionally jobs to reject.
+# Legacy dispatching decision: (job, node ids) pairs ready to start now,
+# plus optionally jobs to reject.  New code uses DispatchPlan instead.
 Decision = Tuple[List[Tuple[Job, List[int]]], List[Job]]
+
+_SCHEDULE_DEPRECATION = (
+    "SchedulerBase.schedule(now, queue, event_manager) is deprecated; "
+    "override/call plan(ctx: DispatchContext) -> DispatchPlan instead "
+    "(DESIGN.md §3 migration guide)."
+)
 
 
 class AllocatorBase(abc.ABC):
-    """Chooses nodes for one job against a scratch availability matrix."""
+    """Chooses nodes for jobs against a scratch availability matrix."""
 
     name: str = "abstract"
 
@@ -35,6 +52,45 @@ class AllocatorBase(abc.ABC):
         """Return ``n_nodes`` node indices whose availability covers
         ``request_vec``, or None if impossible.  MUST NOT modify ``avail``."""
 
+    # -- batched entry point (the new contract) ------------------------
+    def allocate_batch(
+        self,
+        ctx: DispatchContext,
+        order: Sequence[int],
+        avail: Optional[np.ndarray] = None,
+        blocking: bool = True,
+    ) -> List[Tuple[int, Optional[List[int]]]]:
+        """Allocate the queued jobs named by ``order`` (queue indices,
+        scheduler priority order) against ``avail`` (defaults to a copy of
+        ``ctx.avail``; modified in place so later jobs see reduced
+        availability).
+
+        Returns ``(queue_index, node ids | None)`` pairs in processing
+        order.  With ``blocking=True`` (the paper's non-queue-jumping
+        policies) processing stops at the first job that cannot be
+        allocated; the failure itself is recorded.
+
+        This default preserves the sequential per-job semantics (one
+        ``find_nodes`` probe per job); ``VectorizedAllocator`` overrides
+        it with a single batched kernel launch + host-side greedy commit.
+        """
+        if avail is None:
+            avail = ctx.avail.copy()
+        out: List[Tuple[int, Optional[List[int]]]] = []
+        for qi in order:
+            vec = ctx.req[qi]
+            nodes = self.find_nodes(vec, int(ctx.n_nodes[qi]), avail,
+                                    ctx.capacity)
+            if nodes is None:
+                out.append((int(qi), None))
+                if blocking:
+                    break
+            else:
+                avail[nodes] -= vec[None, :]
+                out.append((int(qi), [int(n) for n in nodes]))
+        return out
+
+    # -- legacy per-job loop (kept for old-style callers) ---------------
     def allocate(
         self,
         jobs: Sequence[Job],
@@ -58,13 +114,22 @@ class AllocatorBase(abc.ABC):
                 out.append((job, [int(n) for n in nodes]))
         return out
 
+    def reset(self) -> None:
+        """Clear any per-run state (no-op for stateless allocators)."""
+
 
 class SchedulerBase(abc.ABC):
-    """Produces the dispatching decision for one event point."""
+    """Produces the dispatching plan for one event point.
+
+    Subclasses implement :meth:`plan`.  Pre-batched subclasses that only
+    override the legacy :meth:`schedule` keep working: the default
+    ``plan`` detects the override and bridges through it (with a
+    ``DeprecationWarning``).
+    """
 
     name: str = "abstract"
 
-    def __init__(self, allocator: AllocatorBase) -> None:
+    def __init__(self, allocator: Optional[AllocatorBase]) -> None:
         self.allocator = allocator
 
     @property
@@ -73,22 +138,85 @@ class SchedulerBase(abc.ABC):
             return self.name
         return f"{self.name}-{self.allocator.name}"
 
-    @abc.abstractmethod
-    def schedule(self, now: int, queue: Sequence[Job], event_manager) -> Decision:
-        """Return ``(to_start, to_reject)``.
+    # -- new contract ---------------------------------------------------
+    def plan(self, ctx: DispatchContext) -> DispatchPlan:
+        """Return the :class:`DispatchPlan` for this event point.
 
-        ``event_manager`` exposes the *dispatcher-visible* system status:
-        queued jobs, running jobs with **estimated** release times, and the
-        resource manager's availability — never true durations.
+        ``ctx`` is the *dispatcher-visible* system status: queued-job
+        request matrix, availability/capacity, and **estimated** release
+        events — never true durations.
         """
+        if type(self).schedule is not SchedulerBase.schedule:
+            # legacy subclass: bridge through its schedule() override.
+            # Legacy code reads availability from the live resource
+            # manager, so a wrapper's context rewrite (e.g.
+            # FaultAwareScheduler masking quarantined nodes out of
+            # ctx.avail) must be projected onto it for the duration of
+            # the call.  Estimate rewrites (ctx.est) cannot be bridged —
+            # they exist only in the context.
+            warnings.warn(_SCHEDULE_DEPRECATION, DeprecationWarning,
+                          stacklevel=2)
+            rm = getattr(ctx.event_manager, "rm", None)
+            rewritten = rm is not None and \
+                not np.array_equal(rm.available, ctx.avail)
+            if rewritten:
+                saved = rm.available
+                rm.available = ctx.avail.copy()
+            try:
+                to_start, to_reject = self.schedule(
+                    ctx.now, list(ctx.jobs), ctx.event_manager)
+            finally:
+                if rewritten:
+                    rm.available = saved
+            return DispatchPlan(starts=list(to_start),
+                                rejects=list(to_reject))
+        raise NotImplementedError(
+            f"{type(self).__name__} must override plan() (or the legacy "
+            f"schedule())")
+
+    # -- legacy contract (compatibility shim) ---------------------------
+    def schedule(self, now: int, queue: Sequence[Job], event_manager) -> Decision:
+        """Deprecated per-job entry point; builds a context and delegates
+        to :meth:`plan`, returning the bare ``(to_start, to_reject)``."""
+        warnings.warn(_SCHEDULE_DEPRECATION, DeprecationWarning, stacklevel=2)
+        ctx = DispatchContext.from_event_manager(now, event_manager)
+        return self.plan(ctx).as_decision()
+
+    def reset(self) -> None:
+        """Forget any learned/accumulated state so repeated runs start
+        identical (Experiment calls this between repeats)."""
+        if self.allocator is not None:
+            self.allocator.reset()
 
     # helper shared by subclasses -------------------------------------
+    def _greedy_plan(
+        self,
+        ctx: DispatchContext,
+        order: Sequence[int],
+        blocking: bool = True,
+    ) -> DispatchPlan:
+        """Allocate in ``order`` via the batched allocator entry point."""
+        res = self.allocator.allocate_batch(ctx, order, blocking=blocking)
+        plan = DispatchPlan()
+        attempted = set()
+        for qi, nodes in res:
+            attempted.add(qi)
+            if nodes is None:
+                plan.skips[ctx.jobs[qi].id] = "no-fit"
+            else:
+                plan.starts.append((ctx.jobs[qi], nodes))
+        for qi in order:
+            if qi not in attempted:
+                plan.skips[ctx.jobs[qi].id] = "blocked"
+        return plan
+
     def _greedy(
         self,
         ordered: Sequence[Job],
         event_manager,
         blocking: bool = True,
     ) -> Decision:
+        """Legacy helper (job objects, event-manager availability)."""
         rm = event_manager.rm
         avail = rm.available.copy()
         res = self.allocator.allocate(
@@ -107,5 +235,19 @@ class Dispatcher:
     def name(self) -> str:
         return self.scheduler.dispatcher_name
 
+    def plan(self, ctx: DispatchContext) -> DispatchPlan:
+        """Run the scheduler and stamp per-event instrumentation into
+        ``plan.stats`` (kernel launches, queue depth)."""
+        from ...kernels import counters
+        launches0 = counters.launch_count()
+        plan = self.scheduler.plan(ctx)
+        plan.stats.setdefault("kernel_launches",
+                              counters.launch_count() - launches0)
+        plan.stats.setdefault("queued", ctx.n_queued)
+        return plan
+
     def dispatch(self, now: int, event_manager) -> Decision:
-        return self.scheduler.schedule(now, event_manager.queue, event_manager)
+        """Legacy entry point: context built here, plan downgraded to the
+        bare decision tuple."""
+        ctx = DispatchContext.from_event_manager(now, event_manager)
+        return self.plan(ctx).as_decision()

@@ -1,0 +1,149 @@
+"""Batched dispatch protocol: ``DispatchContext`` in, ``DispatchPlan`` out.
+
+The simulator↔dispatcher contract (DESIGN.md §1).  Instead of the legacy
+per-job callback (``SchedulerBase.schedule(now, queue, event_manager)``
+pulling one job at a time through ``AllocatorBase.find_nodes``), the
+Simulator builds ONE frozen :class:`DispatchContext` per event point — the
+whole queue as a dense request matrix ``[J, R]`` next to the availability
+matrix ``[N, R]`` — and the dispatcher answers with a
+:class:`DispatchPlan`.  This is what lets the vectorized path score every
+(job, node) pair in a single ``alloc_score_batch`` Pallas launch instead
+of O(queue) per-job launches.
+
+Dispatchers become pure functions of the context: trivially testable
+(build a context by hand, inspect the plan) and composable (wrap a plan,
+rewrite a context).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..job import Job
+
+
+@dataclass(frozen=True)
+class ReleaseEvent:
+    """Dispatcher-visible estimated release of a running job's resources.
+
+    ``time`` uses walltime *estimates* (never true durations); ``nodes``
+    and ``vec`` describe what comes back when the job releases.  The
+    ``job`` handle is kept so data-driven dispatchers can re-estimate the
+    release time (e.g. walltime correction) without touching the manager.
+    """
+
+    time: int
+    nodes: np.ndarray            # int64[K]  node indices
+    vec: np.ndarray              # int64[R]  per-node request vector
+    job: Job
+
+    def as_tuple(self) -> Tuple[int, np.ndarray, np.ndarray]:
+        return self.time, self.nodes, self.vec
+
+
+@dataclass(frozen=True)
+class DispatchContext:
+    """Frozen snapshot of everything a dispatcher may look at (paper §3:
+    the dispatcher-visible system status) for one event point.
+
+    Array fields are dense and batched — jobs on axis 0, resource types
+    on the trailing axis — so they feed the batched kernels directly.
+    Planners must treat every array as read-only (copy before scratching).
+    """
+
+    now: int
+    jobs: Tuple[Job, ...]                 # queued jobs, FIFO arrival order
+    req: np.ndarray                       # int64[J, R] per-node request matrix
+    n_nodes: np.ndarray                   # int64[J]    requested node counts
+    est: np.ndarray                       # int64[J]    walltime estimates (>= 1)
+    queued_time: np.ndarray               # int64[J]    queue-entry times
+    avail: np.ndarray                     # int64[N, R] current availability
+    capacity: np.ndarray                  # int64[N, R] node capacities
+    releases: Tuple[ReleaseEvent, ...]    # running jobs, sorted by est. time
+    resource_types: Tuple[str, ...] = ()
+    event_manager: object = field(default=None, repr=False, compare=False)
+
+    # ------------------------------------------------------------------
+    @property
+    def n_queued(self) -> int:
+        return len(self.jobs)
+
+    @property
+    def n_system_nodes(self) -> int:
+        return int(self.avail.shape[0])
+
+    def replace(self, **changes) -> "DispatchContext":
+        """Functional update (the context itself is frozen)."""
+        return dataclasses.replace(self, **changes)
+
+    def release_tuples(self) -> List[Tuple[int, np.ndarray, np.ndarray]]:
+        return [ev.as_tuple() for ev in self.releases]
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_event_manager(cls, now: int, event_manager) -> "DispatchContext":
+        """Build the per-event snapshot the Simulator hands to planners."""
+        rm = event_manager.rm
+        queue: Sequence[Job] = tuple(event_manager.queue)
+        j = len(queue)
+        r = len(rm.resource_types)
+        req = np.zeros((j, r), dtype=np.int64)
+        n_nodes = np.zeros(j, dtype=np.int64)
+        est = np.zeros(j, dtype=np.int64)
+        queued = np.zeros(j, dtype=np.int64)
+        for i, job in enumerate(queue):
+            req[i] = rm.request_vector(job)
+            n_nodes[i] = job.requested_nodes
+            est[i] = max(job.expected_duration, 1)
+            queued[i] = job.queued_time if job.queued_time is not None else now
+        releases = []
+        for t, rjob in event_manager.running_release_times():
+            releases.append(ReleaseEvent(
+                time=int(t),
+                nodes=np.asarray(rjob.assigned_nodes, dtype=np.int64),
+                vec=rm.request_vector(rjob),
+                job=rjob))
+        releases.sort(key=lambda ev: ev.time)
+        return cls(
+            now=int(now), jobs=tuple(queue), req=req, n_nodes=n_nodes,
+            est=est, queued_time=queued, avail=rm.available.copy(),
+            capacity=rm.capacity, releases=tuple(releases),
+            resource_types=tuple(rm.resource_types),
+            event_manager=event_manager)
+
+
+@dataclass
+class DispatchPlan:
+    """A dispatcher's answer for one event point (replaces the bare
+    ``Decision`` tuple).
+
+    ``starts`` and ``rejects`` carry the decision; ``skips`` explains why
+    each remaining queued job was *not* started (queue-jumping debugging,
+    paper §6); ``stats`` carries per-event instrumentation — most
+    importantly ``kernel_launches``, the number of kernel-layer launches
+    this plan cost (O(1) in queue length on the batched path).
+    """
+
+    starts: List[Tuple[Job, List[int]]] = field(default_factory=list)
+    rejects: List[Job] = field(default_factory=list)
+    skips: Dict[str, str] = field(default_factory=dict)
+    stats: Dict[str, float] = field(default_factory=dict)
+
+    # ------------------------------------------------------------------
+    def as_decision(self) -> Tuple[List[Tuple[Job, List[int]]], List[Job]]:
+        """Downgrade to the legacy ``(to_start, to_reject)`` tuple."""
+        return self.starts, self.rejects
+
+    def start_ids(self) -> List[str]:
+        return [job.id for job, _ in self.starts]
+
+    def trace(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Canonical (job id, node tuple) trace for equality tests."""
+        return [(job.id, tuple(nodes)) for job, nodes in self.starts]
+
+    @property
+    def n_started(self) -> int:
+        return len(self.starts)

@@ -8,38 +8,46 @@ computed from walltime *estimates* (the dispatcher never sees true
 durations).  RejectAll is the paper's simulator-performance probe (§6.2):
 it rejects every submitted job, isolating the simulator core from
 dispatching cost.
+
+All policies implement the batched contract: ``plan(ctx)`` turns the
+:class:`DispatchContext` into a priority *order* over queue indices and
+delegates allocation to ``AllocatorBase.allocate_batch`` (one kernel
+launch on the vectorized path, regardless of queue depth).
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..job import Job
-from .base import Decision, SchedulerBase
+from .base import SchedulerBase
+from .context import DispatchContext, DispatchPlan, ReleaseEvent
 
 
 class FirstInFirstOut(SchedulerBase):
     name = "FIFO"
 
-    def schedule(self, now, queue, event_manager) -> Decision:
-        return self._greedy(list(queue), event_manager, blocking=True)
+    def plan(self, ctx: DispatchContext) -> DispatchPlan:
+        return self._greedy_plan(ctx, range(ctx.n_queued), blocking=True)
 
 
 class ShortestJobFirst(SchedulerBase):
     name = "SJF"
 
-    def schedule(self, now, queue, event_manager) -> Decision:
-        ordered = sorted(queue, key=lambda j: (max(j.expected_duration, 1), j.queued_time))
-        return self._greedy(ordered, event_manager, blocking=True)
+    def plan(self, ctx: DispatchContext) -> DispatchPlan:
+        order = sorted(range(ctx.n_queued),
+                       key=lambda i: (ctx.est[i], ctx.queued_time[i]))
+        return self._greedy_plan(ctx, order, blocking=True)
 
 
 class LongestJobFirst(SchedulerBase):
     name = "LJF"
 
-    def schedule(self, now, queue, event_manager) -> Decision:
-        ordered = sorted(queue, key=lambda j: (-max(j.expected_duration, 1), j.queued_time))
-        return self._greedy(ordered, event_manager, blocking=True)
+    def plan(self, ctx: DispatchContext) -> DispatchPlan:
+        order = sorted(range(ctx.n_queued),
+                       key=lambda i: (-ctx.est[i], ctx.queued_time[i]))
+        return self._greedy_plan(ctx, order, blocking=True)
 
 
 class RejectAll(SchedulerBase):
@@ -48,8 +56,8 @@ class RejectAll(SchedulerBase):
     def __init__(self, allocator=None) -> None:  # allocator unused
         super().__init__(allocator)
 
-    def schedule(self, now, queue, event_manager) -> Decision:
-        return [], list(queue)
+    def plan(self, ctx: DispatchContext) -> DispatchPlan:
+        return DispatchPlan(rejects=list(ctx.jobs))
 
 
 class EasyBackfilling(SchedulerBase):
@@ -68,79 +76,89 @@ class EasyBackfilling(SchedulerBase):
 
     name = "EBF"
 
-    def schedule(self, now, queue, event_manager) -> Decision:
-        rm = event_manager.rm
-        avail = rm.available.copy()
-        q: List[Job] = list(queue)  # FIFO arrival order
-        to_start: List[Tuple[Job, List[int]]] = []
+    def plan(self, ctx: DispatchContext) -> DispatchPlan:
+        find = self._make_finder(ctx)
+        avail = ctx.avail.copy()
+        plan = DispatchPlan()
+        j_total = ctx.n_queued
 
         # --- 1. greedy head dispatch ----------------------------------
         i = 0
-        while i < len(q):
-            job = q[i]
-            vec = rm.request_vector(job)
-            nodes = self.allocator.find_nodes(vec, job.requested_nodes, avail, rm.capacity)
+        while i < j_total:
+            nodes = find(i, avail)
             if nodes is None:
                 break
-            avail[nodes] -= vec[None, :]
-            to_start.append((job, [int(n) for n in nodes]))
+            avail[nodes] -= ctx.req[i][None, :]
+            plan.starts.append((ctx.jobs[i], [int(n) for n in nodes]))
             i += 1
-        if i >= len(q):
-            return to_start, []
+        if i >= j_total:
+            return plan
 
-        head = q[i]
-        head_vec = rm.request_vector(head)
+        head = i
+        plan.skips[ctx.jobs[head].id] = "head-blocked"
 
         # --- 2. shadow time + reservation ------------------------------
-        releases = self._release_events(now, event_manager, to_start, rm)
+        # phase-1 starts are exactly queue indices 0..head-1, in order
+        started_idx = [(qi, nodes)
+                       for qi, (_, nodes) in enumerate(plan.starts)]
+        releases = self._release_events(ctx, started_idx)
         shadow_time, shadow_avail = self._shadow(
-            avail, head_vec, head.requested_nodes, releases)
+            avail, ctx.req[head], int(ctx.n_nodes[head]), releases)
         if shadow_time is None:
             # head never fits even with everything released — should have
             # been rejected at submission; be conservative: no backfilling.
-            return to_start, []
-        head_nodes = self.allocator.find_nodes(
-            head_vec, head.requested_nodes, shadow_avail, rm.capacity)
+            for qi in range(head + 1, j_total):
+                plan.skips[ctx.jobs[qi].id] = "no-shadow"
+            return plan
+        head_nodes = find(head, shadow_avail)
         assert head_nodes is not None
         extra = shadow_avail.copy()
-        extra[head_nodes] -= head_vec[None, :]
+        extra[head_nodes] -= ctx.req[head][None, :]
 
         # --- 3. backfill ------------------------------------------------
-        for job in q[i + 1:]:
-            vec = rm.request_vector(job)
-            est_end = now + max(job.expected_duration, 1)
+        for qi in range(head + 1, j_total):
+            est_end = ctx.now + int(ctx.est[qi])
             if est_end <= shadow_time:
-                nodes = self.allocator.find_nodes(
-                    vec, job.requested_nodes, avail, rm.capacity)
+                nodes = find(qi, avail)
                 if nodes is None:
+                    plan.skips[ctx.jobs[qi].id] = "no-fit"
                     continue
-                avail[nodes] -= vec[None, :]
+                avail[nodes] -= ctx.req[qi][None, :]
             else:
                 # must not touch the head's reservation: fit within
                 # min(available now, extra at shadow)
                 combined = np.minimum(avail, extra)
-                nodes = self.allocator.find_nodes(
-                    vec, job.requested_nodes, combined, rm.capacity)
+                nodes = find(qi, combined)
                 if nodes is None:
+                    plan.skips[ctx.jobs[qi].id] = "would-delay-head"
                     continue
-                avail[nodes] -= vec[None, :]
-                extra[nodes] -= vec[None, :]
-            to_start.append((job, [int(n) for n in nodes]))
-        return to_start, []
+                avail[nodes] -= ctx.req[qi][None, :]
+                extra[nodes] -= ctx.req[qi][None, :]
+            plan.starts.append((ctx.jobs[qi], [int(n) for n in nodes]))
+        return plan
 
     # ------------------------------------------------------------------
+    def _make_finder(self, ctx: DispatchContext) -> Callable:
+        """``(queue_index, avail) -> node ids | None`` probe.
+
+        The base finder delegates to the allocator's per-job
+        ``find_nodes``; ``VectorizedEasyBackfilling`` overrides this with
+        a one-launch batched probe shared by all phases of the round.
+        """
+        def find(qi: int, avail: np.ndarray) -> Optional[np.ndarray]:
+            return self.allocator.find_nodes(
+                ctx.req[qi], int(ctx.n_nodes[qi]), avail, ctx.capacity)
+        return find
+
     @staticmethod
-    def _release_events(now, event_manager, to_start, rm):
+    def _release_events(ctx: DispatchContext, started_idx) -> List[Tuple]:
         """(est_release, node_idx, per_node_vec) for running + just-started
-        jobs, using walltime estimates only."""
-        releases = []
-        for est, rjob in event_manager.running_release_times():
-            idx = np.asarray(rjob.assigned_nodes, dtype=np.int64)
-            releases.append((int(est), idx, rm.request_vector(rjob)))
-        for job, nodes in to_start:
-            est = now + max(job.expected_duration, 1)
-            releases.append((int(est), np.asarray(nodes, dtype=np.int64),
-                             rm.request_vector(job)))
+        (queue index, nodes) jobs, using walltime estimates only."""
+        releases = [ev.as_tuple() for ev in ctx.releases]
+        for qi, nodes in started_idx:
+            est = ctx.now + int(ctx.est[qi])
+            releases.append((est, np.asarray(nodes, dtype=np.int64),
+                             ctx.req[qi]))
         releases.sort(key=lambda r: r[0])
         return releases
 

@@ -31,6 +31,7 @@ except Exception:  # pragma: no cover
 from ..utils import rss_mb
 from .additional_data import AdditionalData, NodeFailureModel
 from .dispatchers.base import Dispatcher, SchedulerBase
+from .dispatchers.context import DispatchContext
 from .events import EventManager
 from .job import Job, JobFactory, swf_resource_mapper
 from .monitors import SystemStatus, UtilizationMonitor
@@ -128,6 +129,8 @@ class Simulator:
         wall_start = time.time()
         dispatch_total = 0.0
         n_events = 0
+        n_dispatch_events = 0
+        kernel_launches_total = 0
         mem_samples: List[float] = []
 
         while em.has_events():
@@ -161,12 +164,20 @@ class Simulator:
                     em.reject_job(job)
 
             d0 = time.perf_counter()
+            dt_launches = 0
             if em.queue:
-                to_start, to_reject = self.dispatcher.dispatch(t, em)
-                for job, nodes in to_start:
+                # one frozen context per event point; the dispatcher
+                # answers with a DispatchPlan (batched protocol)
+                ctx = DispatchContext.from_event_manager(t, em)
+                plan = self.dispatcher.plan(ctx)
+                self.last_plan = plan
+                for job, nodes in plan.starts:
                     em.start_job(job, nodes)
-                for job in to_reject:
+                for job in plan.rejects:
                     em.reject_job(job)
+                dt_launches = int(plan.stats.get("kernel_launches", 0))
+                kernel_launches_total += dt_launches
+                n_dispatch_events += 1
             dt_dispatch = time.perf_counter() - d0
             dispatch_total += dt_dispatch
 
@@ -185,6 +196,7 @@ class Simulator:
                         "queue": len(em.queue),
                         "running": len(em.running),
                         "dispatch_s": dt_dispatch,
+                        "kernel_launches": dt_launches,
                         "rss_mb": rss,
                     }) + b"\n")
             if max_events is not None and n_events >= max_events:
@@ -200,6 +212,10 @@ class Simulator:
             "cpu_time_s": cpu_total,
             "wall_time_s": time.time() - wall_start,
             "dispatch_time_s": dispatch_total,
+            "kernel_launches": kernel_launches_total,
+            "kernel_launches_per_event": (
+                kernel_launches_total / n_dispatch_events
+                if n_dispatch_events else 0.0),
             "sim_end_time": em.current_time,
             "mem_avg_mb": (sum(mem_samples) / len(mem_samples)) if mem_samples else rss_mb(),
             "mem_max_mb": max(mem_samples) if mem_samples else rss_mb(),

@@ -6,6 +6,7 @@
 """
 from __future__ import annotations
 
+import copy
 import json
 import os
 from typing import Dict, List, Optional, Sequence, Type
@@ -50,7 +51,13 @@ class Experiment:
             summaries = []
             out_path = None
             for rep in range(self.repeats):
-                sim = Simulator(self.workload, self.sys_config, sched,
+                # each repeat runs a FRESH scheduler: data-driven
+                # dispatchers (observe_completion) must not leak learned
+                # state between repeats, or repeat statistics are biased
+                # toward the later (better-informed) runs
+                rep_sched = copy.deepcopy(sched)
+                rep_sched.reset()
+                sim = Simulator(self.workload, self.sys_config, rep_sched,
                                 output_dir=self.output_dir,
                                 name=f"{name}-r{rep}" if self.repeats > 1 else name,
                                 **self.sim_kwargs)

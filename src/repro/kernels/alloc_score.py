@@ -1,15 +1,26 @@
-"""Pallas TPU kernel: per-node fit mask + Best-Fit load score.
+"""Pallas TPU kernels: fit mask + Best-Fit load score, per-job and batched.
 
-This is the inner loop of the paper's allocators (FF/BF, §3): for one
-job's per-node request, decide for every node whether it fits and how
-loaded the node is.  AccaSim does this with a Python loop over nodes; the
-TPU-native formulation tiles the node axis into VMEM blocks (lane dim,
-128-aligned) with resource types on the sublane axis, and evaluates the
-whole block with VPU compare/reduce ops.
+This is the inner loop of the paper's allocators (FF/BF, §3): decide for
+every node whether a job's per-node request fits and how loaded the node
+is.  AccaSim does this with a Python loop over nodes; the TPU-native
+formulation tiles the node axis into VMEM blocks (lane dim, 128-aligned)
+with resource types on the sublane axis, and evaluates the whole block
+with VPU compare/reduce ops.
+
+Two entry points:
+
+* :func:`alloc_score_pallas` — ONE job request against all nodes
+  (``req [R]`` × ``avail [R, N]`` → ``fit/score [N]``); the legacy
+  per-job path, launched once per queued job.
+* :func:`alloc_score_batch_pallas` — the WHOLE queue at once
+  (``req [J, R]`` × ``avail [R, N]`` → ``fit/score [J, N]``), jobs on
+  the sublane axis, nodes on the lane axis, one grid = one launch per
+  dispatch event (DESIGN.md §2).  This is what ``allocate_batch`` uses.
 
 Layout: inputs are transposed to ``[R, N]`` so the large node axis is the
 TPU lane dimension; N is padded to the block size with sentinel values
-(avail = -1 never fits, capacity = 1 avoids div-by-zero).
+(avail = -1 never fits, capacity = 1 avoids div-by-zero); J is padded
+with zero request rows (sliced off by the wrapper).
 """
 from __future__ import annotations
 
@@ -20,6 +31,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK_N = 512
+DEFAULT_BLOCK_J = 8          # f32/int32 sublane tile
 
 
 def _alloc_score_kernel(req_ref, avail_ref, cap_ref, fit_ref, score_ref):
@@ -72,3 +84,68 @@ def alloc_score_pallas(
         name="alloc_score",
     )(req2, avail_t, cap_t)
     return fit[0, :n], score[0, :n]
+
+
+def _alloc_score_batch_kernel(req_ref, avail_ref, cap_ref, fit_ref, score_ref):
+    q = req_ref[...]                        # [BJ, R] int32
+    a = avail_ref[...]                      # [R, BN] int32
+    c = cap_ref[...]                        # [R, BN] int32
+    bj = q.shape[0]
+    bn = a.shape[1]
+    # AND over the (tiny, static) resource axis: each step is one VPU
+    # compare of a [BJ, BN] tile — jobs on sublanes, nodes on lanes.
+    fit = jnp.ones((bj, bn), dtype=jnp.bool_)
+    for k in range(q.shape[1]):
+        fit = jnp.logical_and(fit, a[k, :][None, :] >= q[:, k][:, None])
+    used = (c - a).astype(jnp.float32) / jnp.maximum(c, 1).astype(jnp.float32)
+    score = jnp.sum(used, axis=0)                             # [BN]
+    fit_ref[...] = fit.astype(jnp.int32)
+    score_ref[...] = jnp.broadcast_to(score[None, :], (bj, bn))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_j", "block_n", "interpret"))
+def alloc_score_batch_pallas(
+    avail: jax.Array,          # int32[N, R]
+    capacity: jax.Array,       # int32[N, R]
+    req: jax.Array,            # int32[J, R]  whole-queue request matrix
+    *,
+    block_j: int = DEFAULT_BLOCK_J,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = False,
+):
+    """Returns (fit int32[J, N], score f32[J, N]) — the one-shot
+    queue×node scoring of ``ref.alloc_score_batch_ref``; a single launch
+    replaces J per-job ``alloc_score`` launches."""
+    n, r = avail.shape
+    j = req.shape[0]
+    n_pad = -(-n // block_n) * block_n
+    j_pad = -(-j // block_j) * block_j
+    avail_t = jnp.full((r, n_pad), -1, dtype=jnp.int32)
+    cap_t = jnp.ones((r, n_pad), dtype=jnp.int32)
+    avail_t = avail_t.at[:, :n].set(avail.astype(jnp.int32).T)
+    cap_t = cap_t.at[:, :n].set(capacity.astype(jnp.int32).T)
+    req_p = jnp.zeros((j_pad, r), dtype=jnp.int32)
+    req_p = req_p.at[:j].set(req.astype(jnp.int32))
+
+    grid = (j_pad // block_j, n_pad // block_n)
+    fit, score = pl.pallas_call(
+        _alloc_score_batch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_j, r), lambda i, k: (i, 0)),
+            pl.BlockSpec((r, block_n), lambda i, k: (0, k)),
+            pl.BlockSpec((r, block_n), lambda i, k: (0, k)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_j, block_n), lambda i, k: (i, k)),
+            pl.BlockSpec((block_j, block_n), lambda i, k: (i, k)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((j_pad, n_pad), jnp.int32),
+            jax.ShapeDtypeStruct((j_pad, n_pad), jnp.float32),
+        ],
+        interpret=interpret,
+        name="alloc_score_batch",
+    )(req_p, avail_t, cap_t)
+    return fit[:j, :n], score[:j, :n]

@@ -1,0 +1,28 @@
+"""Kernel-launch accounting — dependency-free on purpose.
+
+``ops.py`` records one launch per public wrapper call; the dispatch layer
+(``Dispatcher.plan``) snapshots the totals around each planning call to
+stamp ``DispatchPlan.stats["kernel_launches"]``.  Living outside
+``ops.py`` keeps the counter importable by numpy-only code paths without
+paying the JAX import.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+_launches: Dict[str, int] = {}
+
+
+def record(name: str) -> None:
+    """Count one launch of kernel ``name``."""
+    _launches[name] = _launches.get(name, 0) + 1
+
+
+def launch_count() -> int:
+    """Total kernel-layer launches since process start (monotone)."""
+    return sum(_launches.values())
+
+
+def launch_stats() -> Dict[str, int]:
+    """Per-op launch counters (copy; monotone since process start)."""
+    return dict(_launches)

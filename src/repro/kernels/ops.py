@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .alloc_score import alloc_score_pallas
+from .alloc_score import alloc_score_batch_pallas, alloc_score_pallas
 from .ebf_shadow import ebf_shadow_pallas
 from .selective_scan import selective_scan_pallas
 
@@ -24,6 +24,16 @@ def _mode() -> str:
     if forced in ("interpret", "ref", "tpu", "stub"):
         return forced
     return "tpu" if jax.default_backend() == "tpu" else "ref"
+
+
+# ----------------------------------------------------------------------
+# Launch accounting (see counters.py).  Every public wrapper below counts
+# as ONE launch per call (a jit'd ref call stands in for the kernel on
+# non-TPU backends, so it costs a dispatch all the same).
+# ``DispatchPlan.stats`` snapshots this to prove the batched path is O(1)
+# launches per dispatch event.
+# ----------------------------------------------------------------------
+from .counters import launch_count, launch_stats, record as _record
 
 
 def _scan_traffic_stub(u, delta, A, B, C, D):
@@ -46,6 +56,7 @@ def _scan_traffic_stub(u, delta, A, B, C, D):
 
 def alloc_score(avail, capacity, req):
     """(fit int32[N], score f32[N]) for one job request (FF/BF inner loop)."""
+    _record("alloc_score")
     mode = _mode()
     if mode == "ref":
         return jax.jit(ref.alloc_score_ref)(avail, capacity, req)
@@ -53,8 +64,41 @@ def alloc_score(avail, capacity, req):
                               interpret=(mode == "interpret"))
 
 
+def alloc_score_batch(avail, capacity, req):
+    """(fit int32[J, N], score f32[J, N]) for the whole queue in ONE
+    launch (``DispatchContext.req`` × availability — the batched dispatch
+    path's only kernel).
+
+    The job axis is padded to the next power of two (>= 8) before the
+    jit'd implementation: queue depth changes at every dispatch event,
+    and bucketing keeps the jit/lowering cache to O(log J) entries
+    instead of one per distinct depth.  Pad and slice happen on the host
+    (numpy) — doing them as eager jnp ops would compile a fresh tiny
+    executable per distinct J, which is exactly the churn the bucket
+    avoids.  Zero request rows fit everywhere and are sliced off before
+    returning (as numpy arrays; the greedy commit is host-side anyway).
+    """
+    import numpy as np
+
+    _record("alloc_score_batch")
+    mode = _mode()
+    req = np.asarray(req)
+    j = req.shape[0]
+    j_bucket = max(8, 1 << max(j - 1, 0).bit_length())
+    if j_bucket != j:
+        req = np.concatenate(
+            [req, np.zeros((j_bucket - j, req.shape[1]), dtype=req.dtype)])
+    if mode == "ref":
+        fit, score = jax.jit(ref.alloc_score_batch_ref)(avail, capacity, req)
+    else:
+        fit, score = alloc_score_batch_pallas(
+            avail, capacity, req, interpret=(mode == "interpret"))
+    return np.asarray(fit)[:j], np.asarray(score)[:j]
+
+
 def ebf_shadow_fits(avail, deltas, req):
     """fits int32[M]: fitting-node count per release prefix (EBF shadow)."""
+    _record("ebf_shadow")
     mode = _mode()
     if mode == "ref":
         return jax.jit(ref.ebf_shadow_ref)(avail, deltas, req)
@@ -64,6 +108,7 @@ def ebf_shadow_fits(avail, deltas, req):
 
 def selective_scan(u, delta, A, B, C, D, chunk: int = 128):
     """Mamba-1 selective scan: (y, h_last)."""
+    _record("selective_scan")
     mode = _mode()
     if mode == "stub":
         return _scan_traffic_stub(u, delta, A, B, C, D)

@@ -28,6 +28,27 @@ def alloc_score_ref(avail: jax.Array, capacity: jax.Array, req: jax.Array):
 
 
 # ----------------------------------------------------------------------
+# alloc_score_batch: queue×node fit mask + load score in one shot
+# ----------------------------------------------------------------------
+def alloc_score_batch_ref(avail: jax.Array, capacity: jax.Array,
+                          req: jax.Array):
+    """avail/capacity: int32[N, R]; req: int32[J, R] (whole-queue request
+    matrix from ``DispatchContext.req``).
+
+    Returns (fit int32[J, N], score f32[J, N]) where fit[j, n] = 1 iff
+    node n can host one rank of job j, and score[j, n] is node n's
+    fraction-in-use summed over resource types (identical for all j — the
+    Best-Fit key depends only on node state — but materialized [J, N] to
+    match the batched kernel's block layout).
+    """
+    fit = jnp.all(avail[None, :, :] >= req[:, None, :], axis=2)
+    cap = jnp.maximum(capacity, 1).astype(jnp.float32)
+    score = ((capacity - avail).astype(jnp.float32) / cap).sum(axis=1)
+    score = jnp.broadcast_to(score[None, :], fit.shape)
+    return fit.astype(jnp.int32), score
+
+
+# ----------------------------------------------------------------------
 # ebf_shadow: fit-count per release-prefix for EASY backfilling
 # ----------------------------------------------------------------------
 def ebf_shadow_ref(avail: jax.Array, deltas: jax.Array, req: jax.Array):

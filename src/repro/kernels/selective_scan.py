@@ -21,6 +21,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x;
+# resolve whichever this installation ships.
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _selective_scan_kernel(u_ref, dt_ref, A_ref, B_ref, C_ref, D_ref,
                            y_ref, hlast_ref, h_ref):
@@ -98,7 +103,7 @@ def selective_scan_pallas(
             jax.ShapeDtypeStruct((bt, di, s), f32),
         ],
         scratch_shapes=[pltpu.VMEM((block_d, s), f32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="selective_scan",

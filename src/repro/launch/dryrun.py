@@ -149,6 +149,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, rules: str,
                 "fits_16gib_hbm": bool(per_dev <= HBM_PER_CHIP),
             }
             ca = compiled.cost_analysis() or {}
+            if isinstance(ca, (list, tuple)):   # older jax: one dict per program
+                ca = ca[0] if ca else {}
             rec["cost_analysis_raw"] = {
                 "flops": float(ca.get("flops", -1)),
                 "bytes_accessed": float(ca.get("bytes accessed", -1)),

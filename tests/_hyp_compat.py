@@ -1,0 +1,119 @@
+"""Hypothesis compatibility layer for the test suite.
+
+The CI container does not ship ``hypothesis``.  When it IS installed we
+re-export the real ``given`` / ``settings`` / ``strategies``; when it is
+not, we degrade property-based tests to a fixed, seeded parametrization:
+each strategy knows how to draw an example from a ``random.Random``, and
+``@given`` becomes a loop over deterministic seeds (one draw per
+"example").  Coverage is thinner than real hypothesis (no shrinking, no
+adaptive search) but the tests stay collectable, deterministic and
+meaningful.
+
+Usage (drop-in)::
+
+    from _hyp_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings  # type: ignore
+    from hypothesis import strategies as st  # type: ignore
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    _DEFAULT_EXAMPLES = 10
+
+    class _Strategy:
+        """A value source: ``draw(rng)`` returns one example."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        """Subset of ``hypothesis.strategies`` used by this repo."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: rng.choice(options))
+
+        @staticmethod
+        def builds(fn, *arg_strats, **kw_strats):
+            def draw(rng):
+                args = [s.draw(rng) for s in arg_strats]
+                kwargs = {k: s.draw(rng) for k, s in kw_strats.items()}
+                return fn(*args, **kwargs)
+            return _Strategy(draw)
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            def draw(rng):
+                size = rng.randint(min_size, max_size)
+                return [elem.draw(rng) for _ in range(size)]
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def given(*arg_strats, **kw_strats):
+        """Fallback ``@given``: run the test body once per fixed seed,
+        drawing every strategy argument from a seeded RNG."""
+
+        def decorator(fn):
+            sig_params = [p for p in inspect.signature(fn).parameters
+                          if p not in ("self",)]
+            # positional strategies bind to the test's FIRST parameters,
+            # mirroring hypothesis' binding rules
+            bound = dict(zip(sig_params, arg_strats))
+            bound.update(kw_strats)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                for seed in range(n):
+                    rng = random.Random(0xACCA + seed)
+                    drawn = {k: s.draw(rng) for k, s in bound.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            wrapper._max_examples = _DEFAULT_EXAMPLES
+            wrapper._is_fallback_given = True
+            # strip the strategy-bound params from the wrapper signature
+            # so pytest does not look for fixtures with those names
+            sig = inspect.signature(fn)
+            keep = [p for name, p in sig.parameters.items()
+                    if name not in bound]
+            wrapper.__signature__ = sig.replace(parameters=keep)
+            return wrapper
+
+        return decorator
+
+    def settings(max_examples=None, deadline=None, **_ignored):
+        """Fallback ``@settings``: only ``max_examples`` is honoured (it
+        caps the seed loop); everything else is accepted and ignored."""
+
+        def decorator(fn):
+            if max_examples is not None and \
+                    getattr(fn, "_is_fallback_given", False):
+                fn._max_examples = max_examples
+            return fn
+
+        return decorator

@@ -83,9 +83,10 @@ def test_fault_aware_scheduler_avoids_quarantined(tmp_path):
     sched = FaultAwareScheduler(FirstInFirstOut(FirstFit()))
     sched.note_failure(0, 0)
     sched.note_failure(0, 1)
-    to_start, _ = sched.schedule(0, em.queue, em)
-    assert len(to_start) == 1
-    nodes = to_start[0][1]
+    from repro.core.dispatchers import DispatchContext
+    plan = sched.plan(DispatchContext.from_event_manager(0, em))
+    assert plan.n_started == 1
+    nodes = plan.starts[0][1]
     assert 0 not in nodes and 1 not in nodes
 
 

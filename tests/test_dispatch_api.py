@@ -1,0 +1,227 @@
+"""The batched dispatch protocol (DispatchContext / DispatchPlan).
+
+Covers the api_redesign contract:
+* trace-for-trace equality of DispatchPlan decisions between the numpy
+  ``allocate_batch`` default and the ``alloc_score_batch`` Pallas path
+  (interpret mode) across FF/BF × FIFO/SJF/EBF;
+* O(1) kernel launches per dispatch event on the vectorized path,
+  independent of queue depth (J >= 32);
+* the legacy ``schedule()`` shim: identical plans + DeprecationWarning,
+  and legacy subclasses (schedule-only overrides) still simulate.
+"""
+import random
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import EventManager, Job, ResourceManager, Simulator
+from repro.core.dispatchers import (BestFit, DispatchContext, DispatchPlan,
+                                    EasyBackfilling, FirstFit,
+                                    FirstInFirstOut, ShortestJobFirst)
+from repro.core.dispatchers.base import Dispatcher, SchedulerBase
+from repro.core.dispatchers.vectorized import (VectorizedAllocator,
+                                               VectorizedEasyBackfilling)
+
+SYS = {"groups": {"a": {"core": 4, "mem": 1024}, "b": {"core": 8, "mem": 2048}},
+       "nodes": {"a": 6, "b": 4}}
+
+
+def make_jobs(n=160, seed=3, burst=False):
+    rng = random.Random(seed)
+    return [Job(id=str(i), user_id=1,
+                submission_time=0 if burst else i * 5,
+                duration=rng.randint(5, 400),
+                expected_duration=rng.randint(5, 500),
+                requested_nodes=rng.randint(1, 4),
+                requested_resources={"core": rng.randint(1, 4),
+                                     "mem": rng.randint(64, 900)})
+            for i in range(n)]
+
+
+def full_trace(sched, tag, tmp_path, n=160, seed=3):
+    """(job id, start, nodes) for every started job of a whole run."""
+    import json
+    sim = Simulator(make_jobs(n, seed), SYS, sched,
+                    output_dir=str(tmp_path), name=tag)
+    out = sim.start_simulation()
+    recs = [json.loads(l) for l in open(out)]
+    return [(r["id"], r["start"], tuple(r["assigned"])) for r in recs], sim
+
+
+# ---------------------------------------------------------------- traces
+@pytest.mark.parametrize("np_sched,vx_sched,tag", [
+    (lambda: FirstInFirstOut(FirstFit()),
+     lambda: FirstInFirstOut(VectorizedAllocator("FF")), "fifo-ff"),
+    (lambda: FirstInFirstOut(BestFit()),
+     lambda: FirstInFirstOut(VectorizedAllocator("BF")), "fifo-bf"),
+    (lambda: ShortestJobFirst(FirstFit()),
+     lambda: ShortestJobFirst(VectorizedAllocator("FF")), "sjf-ff"),
+    (lambda: ShortestJobFirst(BestFit()),
+     lambda: ShortestJobFirst(VectorizedAllocator("BF")), "sjf-bf"),
+    (lambda: EasyBackfilling(FirstFit()),
+     lambda: VectorizedEasyBackfilling(VectorizedAllocator("FF")), "ebf-ff"),
+    (lambda: EasyBackfilling(BestFit()),
+     lambda: VectorizedEasyBackfilling(VectorizedAllocator("BF")), "ebf-bf"),
+])
+def test_batched_trace_equivalence(tmp_path, np_sched, vx_sched, tag):
+    """numpy allocate_batch and the alloc_score_batch Pallas path make
+    bit-identical dispatching decisions over whole simulations."""
+    a, _ = full_trace(np_sched(), f"np-{tag}", tmp_path)
+    b, _ = full_trace(vx_sched(), f"vx-{tag}", tmp_path)
+    assert a == b
+
+
+def test_plan_equivalence_single_event():
+    """Plan-level equality on one deep-queue event: same starts, same
+    node assignments, job-level skip reasons filled in."""
+    rm = ResourceManager(SYS)
+    em = EventManager(iter(make_jobs(64, seed=9, burst=True)), rm)
+    em.advance_to(0)
+    ctx = DispatchContext.from_event_manager(0, em)
+    p_np = FirstInFirstOut(FirstFit()).plan(ctx)
+    p_vx = FirstInFirstOut(VectorizedAllocator("FF")).plan(ctx)
+    assert p_np.trace() == p_vx.trace()
+    assert p_np.n_started > 0
+    # blocking FIFO: exactly one no-fit, everything behind it blocked
+    assert list(p_vx.skips.values()).count("no-fit") == 1
+    assert set(p_vx.skips.values()) == {"no-fit", "blocked"}
+
+
+# ---------------------------------------------------------------- launches
+def test_batched_path_is_o1_kernel_launches():
+    """With J >= 32 queued jobs the vectorized path costs exactly ONE
+    alloc_score_batch launch per dispatch event — independent of J."""
+    counts = {}
+    for j in (32, 64, 128):
+        rm = ResourceManager(SYS)
+        em = EventManager(iter(make_jobs(j, seed=5, burst=True)), rm)
+        em.advance_to(0)
+        assert len(em.queue) == j >= 32
+        ctx = DispatchContext.from_event_manager(0, em)
+        disp = Dispatcher(FirstInFirstOut(VectorizedAllocator("FF")))
+        plan = disp.plan(ctx)
+        counts[j] = plan.stats["kernel_launches"]
+        assert plan.stats["queued"] == j
+    assert counts == {32: 1, 64: 1, 128: 1}
+
+
+def test_per_job_path_is_oj_kernel_launches():
+    """The legacy per-job path (batched=False) launches once per probed
+    job — the O(queue) behaviour the redesign removes."""
+    rm = ResourceManager(SYS)
+    em = EventManager(iter(make_jobs(48, seed=5, burst=True)), rm)
+    em.advance_to(0)
+    ctx = DispatchContext.from_event_manager(0, em)
+    disp = Dispatcher(
+        FirstInFirstOut(VectorizedAllocator("FF", batched=False)))
+    plan = disp.plan(ctx)
+    # blocking FIFO probes started jobs + the first blocked one
+    assert plan.stats["kernel_launches"] == plan.n_started + 1
+    assert plan.stats["kernel_launches"] > 1
+
+
+def test_vectorized_ebf_is_o1_kernel_launches():
+    """vEBF (probe + shadow kernel) stays O(1) as the queue deepens."""
+    per_j = {}
+    for j in (32, 96):
+        rm = ResourceManager(SYS)
+        em = EventManager(iter(make_jobs(j, seed=7, burst=True)), rm)
+        em.advance_to(0)
+        ctx = DispatchContext.from_event_manager(0, em)
+        disp = Dispatcher(
+            VectorizedEasyBackfilling(VectorizedAllocator("FF")))
+        per_j[j] = disp.plan(ctx).stats["kernel_launches"]
+    assert per_j[32] == per_j[96] <= 3
+
+
+# ---------------------------------------------------------------- shim
+def test_schedule_shim_identical_and_deprecated():
+    """Calling the legacy schedule() on a new-style scheduler warns and
+    returns exactly the plan's decision."""
+    rm = ResourceManager(SYS)
+    em = EventManager(iter(make_jobs(40, seed=2, burst=True)), rm)
+    em.advance_to(0)
+    sched = FirstInFirstOut(FirstFit())
+    ctx = DispatchContext.from_event_manager(0, em)
+    plan = sched.plan(ctx)
+    with pytest.warns(DeprecationWarning):
+        to_start, to_reject = sched.schedule(0, em.queue, em)
+    assert [(j.id, tuple(n)) for j, n in to_start] == plan.trace()
+    assert to_reject == plan.rejects
+
+
+class _LegacyTail(SchedulerBase):
+    """Old-style user subclass: overrides schedule() only."""
+
+    name = "LEGACY"
+
+    def schedule(self, now, queue, event_manager):
+        ordered = sorted(queue, key=lambda j: j.queued_time or now)
+        return self._greedy(ordered, event_manager, blocking=True)
+
+
+def test_legacy_schedule_subclass_still_works(tmp_path):
+    """A pre-batched subclass drives a whole simulation through the
+    plan() bridge (with a DeprecationWarning) and matches FIFO."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        a, sim_a = full_trace(_LegacyTail(FirstFit()), "legacy", tmp_path,
+                              n=60, seed=4)
+    b, _ = full_trace(FirstInFirstOut(FirstFit()), "fifo-ref", tmp_path,
+                      n=60, seed=4)
+    assert a == b
+    assert sim_a.summary["completed"] > 0
+    with pytest.warns(DeprecationWarning):
+        rm = ResourceManager(SYS)
+        em = EventManager(iter(make_jobs(10, seed=1, burst=True)), rm)
+        em.advance_to(0)
+        _LegacyTail(FirstFit()).plan(
+            DispatchContext.from_event_manager(0, em))
+
+
+def test_context_rewrite_reaches_legacy_inner():
+    """A wrapper's context rewrite (masked availability) must bind on a
+    legacy schedule-only inner scheduler through the plan() bridge."""
+    from repro.cluster.failures import FaultAwareScheduler
+    rm = ResourceManager({"groups": {"g": {"core": 4}}, "nodes": {"g": 4}})
+    job = Job(id="a", user_id=0, submission_time=0, duration=10,
+              expected_duration=10, requested_nodes=1,
+              requested_resources={"core": 1})
+    em = EventManager(iter([job]), rm)
+    em.advance_to(0)
+    sched = FaultAwareScheduler(_LegacyTail(FirstFit()))
+    sched.note_failure(0, 0)          # quarantine node 0
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        plan = sched.plan(DispatchContext.from_event_manager(0, em))
+    assert plan.n_started == 1
+    assert 0 not in plan.starts[0][1]
+    # the bridge restored the live availability afterwards
+    assert np.all(rm.available == rm.capacity)
+
+
+# ---------------------------------------------------------------- context
+def test_context_is_frozen_and_replaceable():
+    rm = ResourceManager(SYS)
+    em = EventManager(iter(make_jobs(8, seed=1, burst=True)), rm)
+    em.advance_to(0)
+    ctx = DispatchContext.from_event_manager(0, em)
+    assert ctx.req.shape == (8, len(rm.resource_types))
+    assert ctx.avail.shape == rm.available.shape
+    with pytest.raises(Exception):
+        ctx.now = 5
+    ctx2 = ctx.replace(est=ctx.est * 2)
+    assert ctx2 is not ctx and np.all(ctx2.est == ctx.est * 2)
+    # snapshot: mutating rm afterwards must not change the context
+    before = ctx.avail.copy()
+    rm.available[:] = 0
+    assert np.all(ctx.avail == before)
+
+
+def test_plan_records_summary_counters(tmp_path):
+    _, sim = full_trace(FirstInFirstOut(VectorizedAllocator("FF")),
+                        "summary", tmp_path, n=60, seed=6)
+    s = sim.summary
+    assert s["kernel_launches"] > 0
+    assert 0 < s["kernel_launches_per_event"] <= 1.0 + 1e-9

@@ -1,7 +1,8 @@
-"""Property-based tests of the dispatching invariants (hypothesis)."""
+"""Property-based tests of the dispatching invariants (hypothesis when
+installed, seeded parametrization otherwise — see _hyp_compat)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.core import EventManager, Job, ResourceManager
 from repro.core.dispatchers import (BestFit, EasyBackfilling, FirstFit,

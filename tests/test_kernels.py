@@ -1,11 +1,12 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret) vs ref.py oracles."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 import jax.numpy as jnp
 from repro.kernels import ref
-from repro.kernels.alloc_score import alloc_score_pallas
+from repro.kernels.alloc_score import (alloc_score_batch_pallas,
+                                       alloc_score_pallas)
 from repro.kernels.ebf_shadow import ebf_shadow_pallas
 from repro.kernels.selective_scan import selective_scan_pallas
 
@@ -45,6 +46,60 @@ def test_alloc_score_property(n, r, seed):
     # scores within [0, r]
     assert np.all(np.asarray(score) >= -1e-6)
     assert np.all(np.asarray(score) <= r + 1e-6)
+
+
+# ------------------------------------------------------------ alloc batch
+@pytest.mark.parametrize("j,n,r", [(1, 1, 1), (3, 7, 2), (8, 128, 3),
+                                   (17, 513, 2), (64, 1000, 4),
+                                   (256, 64, 2)])
+def test_alloc_score_batch_shapes(j, n, r):
+    cap = RNG.integers(1, 16, (n, r)).astype(np.int32)
+    avail = RNG.integers(0, 16, (n, r)).clip(0, cap).astype(np.int32)
+    req = RNG.integers(0, 6, (j, r)).astype(np.int32)
+    f1, s1 = alloc_score_batch_pallas(jnp.asarray(avail), jnp.asarray(cap),
+                                      jnp.asarray(req), interpret=True)
+    f2, s2 = ref.alloc_score_batch_ref(jnp.asarray(avail), jnp.asarray(cap),
+                                       jnp.asarray(req))
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-6)
+
+
+def test_alloc_score_batch_rows_match_per_job_kernel():
+    """Row j of the batched kernel == the per-job kernel on request j."""
+    n, r, j = 257, 3, 19
+    cap = RNG.integers(1, 12, (n, r)).astype(np.int32)
+    avail = RNG.integers(0, 12, (n, r)).clip(0, cap).astype(np.int32)
+    req = RNG.integers(0, 5, (j, r)).astype(np.int32)
+    fb, sb = alloc_score_batch_pallas(jnp.asarray(avail), jnp.asarray(cap),
+                                      jnp.asarray(req), interpret=True)
+    for k in range(j):
+        f1, s1 = alloc_score_pallas(jnp.asarray(avail), jnp.asarray(cap),
+                                    jnp.asarray(req[k]), interpret=True)
+        np.testing.assert_array_equal(np.asarray(fb)[k], np.asarray(f1))
+        np.testing.assert_allclose(np.asarray(sb)[k], np.asarray(s1),
+                                   atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(j=st.integers(1, 40), n=st.integers(1, 200), r=st.integers(1, 5),
+       seed=st.integers(0, 999))
+def test_alloc_score_batch_property(j, n, r, seed):
+    rng = np.random.default_rng(seed)
+    cap = rng.integers(1, 9, (n, r)).astype(np.int32)
+    avail = rng.integers(0, 9, (n, r)).clip(0, cap).astype(np.int32)
+    req = rng.integers(0, 5, (j, r)).astype(np.int32)
+    fit, score = alloc_score_batch_pallas(
+        jnp.asarray(avail), jnp.asarray(cap), jnp.asarray(req),
+        interpret=True)
+    fit = np.asarray(fit)
+    expect = np.all(avail[None, :, :] >= req[:, None, :], axis=2)
+    np.testing.assert_array_equal(fit.astype(bool), expect)
+    # the load score is a per-node quantity: identical across job rows
+    score = np.asarray(score)
+    np.testing.assert_allclose(score,
+                               np.broadcast_to(score[0], score.shape),
+                               atol=0)
+    assert np.all(score >= -1e-6) and np.all(score <= r + 1e-6)
 
 
 # ---------------------------------------------------------------- ebf

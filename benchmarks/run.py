@@ -20,7 +20,7 @@ import time
 import traceback
 
 MODULES = ["table1", "table2", "fig_generator", "kernels", "dispatch",
-           "roofline"]
+           "core", "roofline"]
 
 
 def main() -> None:
@@ -28,8 +28,21 @@ def main() -> None:
     ap.add_argument("--only", default="all")
     ap.add_argument("--out", default="results/bench")
     ap.add_argument("--quick", action="store_true",
-                    help="small dispatch-only sweep -> BENCH_dispatch.json")
+                    help="small dispatch-only sweep -> BENCH_dispatch.json "
+                         "(with --core: 10k-job sweep only)")
+    ap.add_argument("--core", action="store_true",
+                    help="simulation-core sweep (10k/100k/1M synthetic "
+                         "jobs) -> BENCH_core.json")
     args = ap.parse_args()
+    if args.core:
+        from . import bench_core
+        print("name,us_per_call,derived")
+        result = bench_core.run(args.out, quick=args.quick)
+        speed = result.get("speedup_vs_baseline", {})
+        print(f"# core sweep {result['sizes']}: "
+              f"headline={result.get('headline_cell')} "
+              f"speedup_vs_baseline={speed}", file=sys.stderr)
+        return
     if args.quick:
         from . import bench_dispatch
         print("name,us_per_call,derived")
@@ -59,6 +72,9 @@ def main() -> None:
             elif name == "dispatch":
                 from . import bench_dispatch
                 bench_dispatch.run(args.out)
+            elif name == "core":
+                from . import bench_core
+                bench_core.run(args.out)
             elif name == "roofline":
                 from . import roofline
                 roofline.run(args.out)

@@ -1,5 +1,5 @@
 """Cluster fusion demo — the paper's WMS dispatches the ASSIGNED
-architectures onto a 2-pod TPU fleet (DESIGN.md §4):
+architectures onto a 2-pod TPU fleet (DESIGN.md §7):
 
 * job profiles come from the real dry-run records (results/dryrun/),
 * the fleet sees failures (MTBF model) with checkpoint/restart re-queue,

@@ -1,4 +1,4 @@
-"""Sharded checkpointing with elastic restore (DESIGN.md §6).
+"""Sharded checkpointing with elastic restore (DESIGN.md §7).
 
 Layout: ``<dir>/step_<N>/`` holding one ``.npy`` per pytree leaf (path
 encoded in the filename) plus ``manifest.json`` (tree structure, shapes,

@@ -1,4 +1,4 @@
-"""Elastic scaling + straggler mitigation policies (DESIGN §6).
+"""Elastic scaling + straggler mitigation policies (DESIGN §7).
 
 ``ElasticScaler`` resizes *elastic* jobs (those whose profile has a
 scaling curve) at dispatch time: when the queue is deep it admits jobs at

@@ -1,4 +1,4 @@
-"""Failure injection + fault-aware dispatching (DESIGN §6).
+"""Failure injection + fault-aware dispatching (DESIGN §7).
 
 ``FailureInjector`` produces a deterministic fail/repair event trace from
 an exponential failure model (MTBF per host) — fed to the core

@@ -105,7 +105,7 @@ class ModelConfig:
     @property
     def scan_period(self) -> int:
         """Smallest layer period with a homogeneous parameter structure —
-        the unit we stack and ``lax.scan`` over (DESIGN.md §4)."""
+        the unit we stack and ``lax.scan`` over (DESIGN.md §5)."""
         p = 1
         if self.family == "hybrid":
             p = self.attn_every

@@ -10,6 +10,7 @@ Public API mirrors the paper's Fig. 4 instantiation:
     out = sim.start_simulation()
 """
 from .job import Job, JobFactory, JobState, swf_resource_mapper
+from .jobtable import JobTable
 from .resources import ResourceManager
 from .events import EventManager
 from .simulator import Simulator
@@ -17,7 +18,7 @@ from .additional_data import AdditionalData, PowerModel, NodeFailureModel
 from .monitors import SystemStatus, UtilizationMonitor
 
 __all__ = [
-    "Job", "JobFactory", "JobState", "swf_resource_mapper",
+    "Job", "JobFactory", "JobState", "JobTable", "swf_resource_mapper",
     "ResourceManager", "EventManager", "Simulator",
     "AdditionalData", "PowerModel", "NodeFailureModel",
     "SystemStatus", "UtilizationMonitor",

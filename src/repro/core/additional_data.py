@@ -62,7 +62,7 @@ class NodeFailureModel(AdditionalData):
     ``events`` is a list of (time, node_id, kind) with kind in
     {"fail", "repair"}.  On failure the node's availability is zeroed (and
     running jobs on it are re-queued by the simulator); on repair capacity
-    is restored.  Used by the cluster fusion layer (DESIGN.md §6).
+    is restored.  Used by the cluster fusion layer (DESIGN.md §7).
     """
 
     name = "failures"
@@ -89,20 +89,13 @@ class NodeFailureModel(AdditionalData):
         for _, node, kind in self.pending(em.current_time):
             if kind == "fail" and node not in self.failed_nodes:
                 self.failed_nodes.add(node)
-                # re-queue running jobs touching this node
-                victims = [j for j in em.running.values() if node in j.assigned_nodes]
-                for job in victims:
-                    em.rm.release(job)
-                    em.running.pop(job.id)
-                    em._completions = [(t, jid) for t, jid in em._completions
-                                       if jid != job.id]
-                    import heapq
-                    heapq.heapify(em._completions)
-                    job.state = job.state.QUEUED
-                    job.start_time = None
-                    job.end_time = None
-                    job.assigned_nodes = []
-                    em.queue.append(job)
+                # re-queue running jobs touching this node (release +
+                # completion-event cancellation handled by the manager)
+                table = em.table
+                victims = [row for row in em.running_rows()
+                           if node in table.assigned(int(row))]
+                for row in victims:
+                    em.requeue_job(table.view(int(row)))
                     self.requeued_jobs += 1
                 em.rm.available[node, :] = 0
                 em.rm.capacity[node, :] = 0

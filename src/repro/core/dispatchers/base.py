@@ -23,7 +23,7 @@ import numpy as np
 
 from ..job import Job
 from ..resources import ResourceManager
-from .context import DispatchContext, DispatchPlan
+from .context import DispatchContext, DispatchPlan, LazySkips
 
 # Legacy dispatching decision: (job, node ids) pairs ready to start now,
 # plus optionally jobs to reject.  New code uses DispatchPlan instead.
@@ -197,17 +197,37 @@ class SchedulerBase(abc.ABC):
     ) -> DispatchPlan:
         """Allocate in ``order`` via the batched allocator entry point."""
         res = self.allocator.allocate_batch(ctx, order, blocking=blocking)
-        plan = DispatchPlan()
-        attempted = set()
+        skips = LazySkips()
+        plan = DispatchPlan(skips=skips)
         for qi, nodes in res:
-            attempted.add(qi)
             if nodes is None:
-                plan.skips[ctx.jobs[qi].id] = "no-fit"
+                skips[ctx.job_id(qi)] = "no-fit"
             else:
-                plan.starts.append((ctx.jobs[qi], nodes))
-        for qi in order:
-            if qi not in attempted:
-                plan.skips[ctx.jobs[qi].id] = "blocked"
+                plan.starts.append((ctx.job(qi), nodes))
+        # allocate_batch processes a prefix of ``order`` (it stops at the
+        # first failure when blocking); everything after is "blocked" —
+        # labeled lazily so the hot path stays O(started), not O(queue)
+        k = len(res)
+        if k < len(order):
+            guard = None
+            table = ctx.table
+            if table is not None and ctx.queue_rows.size:
+                # per-row generation snapshot: materializing after any of
+                # these rows recycled must fail loudly, not mislabel a
+                # successor job (C-speed gather, no per-job Python; the
+                # FIFO identity order reduces to a plain slice)
+                if isinstance(order, range) and order.start == 0 \
+                        and order.step == 1:
+                    tail_rows = ctx.queue_rows[k:order.stop]
+                else:
+                    tail_rows = ctx.queue_rows[
+                        np.asarray(order[k:], dtype=np.int64)]
+                gen_snap = table.gen[tail_rows].copy()
+                guard = lambda: np.array_equal(table.gen[tail_rows],
+                                               gen_snap)
+            skips.defer(
+                lambda: [ctx.job_id(qi) for qi in order[k:]], "blocked",
+                guard)
         return plan
 
     def _greedy(
@@ -235,10 +255,15 @@ class Dispatcher:
     def name(self) -> str:
         return self.scheduler.dispatcher_name
 
+    _counters = None
+
     def plan(self, ctx: DispatchContext) -> DispatchPlan:
         """Run the scheduler and stamp per-event instrumentation into
         ``plan.stats`` (kernel launches, queue depth)."""
-        from ...kernels import counters
+        counters = Dispatcher._counters
+        if counters is None:
+            from ...kernels import counters
+            Dispatcher._counters = counters
         launches0 = counters.launch_count()
         plan = self.scheduler.plan(ctx)
         plan.stats.setdefault("kernel_launches",

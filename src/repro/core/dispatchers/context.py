@@ -10,6 +10,14 @@ matrix ``[N, R]`` — and the dispatcher answers with a
 (job, node) pair in a single ``alloc_score_batch`` Pallas launch instead
 of O(queue) per-job launches.
 
+Array-native core (DESIGN.md §4): the context's arrays are *slices of
+the JobTable columns* — ``from_event_manager`` is a handful of numpy
+gather ops, never a Python loop over ``Job`` objects.  The two
+object-shaped views (``jobs`` façade tuple, ``releases`` event tuple)
+are built lazily on first access from row snapshots taken at
+construction, so policies that never touch them (FIFO/SJF/LJF) pay
+nothing for them.
+
 Dispatchers become pure functions of the context: trivially testable
 (build a context by hand, inspect the plan) and composable (wrap a plan,
 rewrite a context).
@@ -17,12 +25,15 @@ rewrite a context).
 from __future__ import annotations
 
 import dataclasses
+from collections.abc import MutableMapping
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..job import Job
+
+_EMPTY_ROWS = np.zeros(0, dtype=np.int64)
 
 
 @dataclass(frozen=True)
@@ -55,28 +66,100 @@ class DispatchContext:
     """
 
     now: int
-    jobs: Tuple[Job, ...]                 # queued jobs, FIFO arrival order
     req: np.ndarray                       # int64[J, R] per-node request matrix
     n_nodes: np.ndarray                   # int64[J]    requested node counts
     est: np.ndarray                       # int64[J]    walltime estimates (>= 1)
     queued_time: np.ndarray               # int64[J]    queue-entry times
     avail: np.ndarray                     # int64[N, R] current availability
     capacity: np.ndarray                  # int64[N, R] node capacities
-    releases: Tuple[ReleaseEvent, ...]    # running jobs, sorted by est. time
     resource_types: Tuple[str, ...] = ()
     event_manager: object = field(default=None, repr=False, compare=False)
+    # queued rows in the job table (FIFO order); empty when built by hand
+    queue_rows: np.ndarray = field(default_factory=lambda: _EMPTY_ROWS,
+                                   repr=False, compare=False)
+    table: object = field(default=None, repr=False, compare=False)
+    # lazy object views — pass the public names `jobs=` / `releases=` to
+    # `replace()` (the dataclass constructor takes `_jobs=` / `_releases=`);
+    # None means "materialize from the table on first access"
+    _jobs: Optional[Tuple[Job, ...]] = field(default=None, repr=False,
+                                             compare=False)
+    _releases: Optional[Tuple[ReleaseEvent, ...]] = field(
+        default=None, repr=False, compare=False)
 
     # ------------------------------------------------------------------
     @property
+    def jobs(self) -> Tuple[Job, ...]:
+        """Queued jobs as row-view façades, FIFO arrival order (lazy)."""
+        if self._jobs is None:
+            if self.table is None:
+                if self.queue_rows.size:
+                    raise ValueError(
+                        "hand-built DispatchContext has queue rows but no "
+                        "table; pass _jobs= (or use replace(jobs=...))")
+                object.__setattr__(self, "_jobs", ())
+                return self._jobs
+            view = self.table.view
+            object.__setattr__(
+                self, "_jobs", tuple(view(int(r)) for r in self.queue_rows))
+        return self._jobs
+
+    @property
+    def releases(self) -> Tuple[ReleaseEvent, ...]:
+        """Running jobs' estimated releases, sorted by time.
+
+        Materialized lazily from the event manager's running set, so
+        policies that ignore releases (FIFO/SJF/LJF) pay nothing.  Read
+        it during planning (before the plan's starts commit) — that is
+        when the snapshot semantics of the old eager field held."""
+        if self._releases is None:
+            table = self.table
+            events = []
+            if table is not None and self.event_manager is not None:
+                rows, times = self.event_manager.release_times()
+                if rows.size:
+                    order = np.argsort(times, kind="stable")
+                    for k in order:
+                        row = int(rows[k])
+                        # copies, not views: rows recycle and schedulers
+                        # may scratch on these arrays (same aliasing rule
+                        # as ResourceManager.request_vector)
+                        events.append(ReleaseEvent(
+                            time=int(times[k]),
+                            nodes=table.assigned(row).copy(),
+                            vec=table.req[row].copy(),
+                            job=table.view(row)))
+            object.__setattr__(self, "_releases", tuple(events))
+        return self._releases
+
+    def job(self, qi: int) -> Job:
+        """Façade for queue index ``qi`` without materializing the whole
+        ``jobs`` tuple (hot-path helper for planners)."""
+        if self._jobs is not None:
+            return self._jobs[qi]
+        return self.table.view(int(self.queue_rows[qi]))
+
+    def job_id(self, qi: int) -> str:
+        """Id of queue index ``qi`` without materializing any façade."""
+        if self._jobs is None and self.table is not None \
+                and self.queue_rows.size:
+            return self.table.ids[int(self.queue_rows[qi])]
+        return self.jobs[qi].id
+
+    @property
     def n_queued(self) -> int:
-        return len(self.jobs)
+        return int(self.req.shape[0])
 
     @property
     def n_system_nodes(self) -> int:
         return int(self.avail.shape[0])
 
     def replace(self, **changes) -> "DispatchContext":
-        """Functional update (the context itself is frozen)."""
+        """Functional update (the context itself is frozen).  Accepts the
+        public names ``jobs`` and ``releases`` for the lazy views."""
+        if "jobs" in changes:
+            changes["_jobs"] = tuple(changes.pop("jobs"))
+        if "releases" in changes:
+            changes["_releases"] = tuple(changes.pop("releases"))
         return dataclasses.replace(self, **changes)
 
     def release_tuples(self) -> List[Tuple[int, np.ndarray, np.ndarray]]:
@@ -85,34 +168,100 @@ class DispatchContext:
     # ------------------------------------------------------------------
     @classmethod
     def from_event_manager(cls, now: int, event_manager) -> "DispatchContext":
-        """Build the per-event snapshot the Simulator hands to planners."""
+        """Build the per-event snapshot the Simulator hands to planners —
+        O(1) numpy gathers over the job table, no per-job Python work."""
         rm = event_manager.rm
-        queue: Sequence[Job] = tuple(event_manager.queue)
-        j = len(queue)
-        r = len(rm.resource_types)
-        req = np.zeros((j, r), dtype=np.int64)
-        n_nodes = np.zeros(j, dtype=np.int64)
-        est = np.zeros(j, dtype=np.int64)
-        queued = np.zeros(j, dtype=np.int64)
-        for i, job in enumerate(queue):
-            req[i] = rm.request_vector(job)
-            n_nodes[i] = job.requested_nodes
-            est[i] = max(job.expected_duration, 1)
-            queued[i] = job.queued_time if job.queued_time is not None else now
-        releases = []
-        for t, rjob in event_manager.running_release_times():
-            releases.append(ReleaseEvent(
-                time=int(t),
-                nodes=np.asarray(rjob.assigned_nodes, dtype=np.int64),
-                vec=rm.request_vector(rjob),
-                job=rjob))
-        releases.sort(key=lambda ev: ev.time)
+        table = event_manager.table
+        rows = event_manager.queue_rows()
+        req = table.req[rows]
+        n_nodes = table.requested_nodes[rows]
+        est = np.maximum(table.expected_duration[rows], 1)
+        queued = table.queued_time[rows]     # always set once QUEUED
         return cls(
-            now=int(now), jobs=tuple(queue), req=req, n_nodes=n_nodes,
+            now=int(now), req=req, n_nodes=n_nodes,
             est=est, queued_time=queued, avail=rm.available.copy(),
-            capacity=rm.capacity, releases=tuple(releases),
+            capacity=rm.capacity,
             resource_types=tuple(rm.resource_types),
-            event_manager=event_manager)
+            event_manager=event_manager, queue_rows=rows, table=table)
+
+
+class LazySkips(MutableMapping):
+    """``DispatchPlan.skips`` mapping with O(1) bulk deferral.
+
+    Blocking policies mark every queued job behind the first failure as
+    ``"blocked"`` — labeling those eagerly is an O(queue) Python loop per
+    event, the exact per-entity cost the array-native core removes.
+    Planners instead :meth:`defer` one ``(ids_fn, reason)`` batch; the
+    ids are materialized only if somebody actually reads the mapping
+    (tests, queue-jumping debugging — paper §6).
+
+    Deliberately NOT a ``dict`` subclass: C-level consumers
+    (``dict(m)``, ``{**m}``, ``json.dumps``) would bypass overridden
+    methods on a subclass and silently see the un-materialized storage;
+    through the MutableMapping protocol they all resolve via
+    ``keys``/``__getitem__`` and observe the full mapping.
+
+    Deferred thunks resolve job ids from live table rows.  Each batch
+    carries a staleness guard: reading the mapping after those rows were
+    recycled (e.g. ``sim.last_plan.skips`` long after the run) raises
+    ``RuntimeError`` instead of returning another job's id.
+    """
+
+    __slots__ = ("_data", "_deferred")
+
+    def __init__(self, *args, **kw) -> None:
+        self._data: Dict[str, str] = dict(*args, **kw)
+        self._deferred: List = []
+
+    def defer(self, ids_fn, reason: str, guard_fn=None) -> None:
+        """Queue a ``(ids_fn, reason)`` batch.  ``guard_fn`` (optional)
+        is called at materialize time and must return True while the ids
+        are still resolvable."""
+        self._deferred.append((ids_fn, reason, guard_fn))
+
+    def _materialize(self) -> None:
+        if self._deferred:
+            batches, self._deferred = self._deferred, []
+            for ids_fn, reason, guard_fn in batches:
+                if guard_fn is not None and not guard_fn():
+                    raise RuntimeError(
+                        "plan.skips was read after the queued jobs' table "
+                        "rows were recycled; read skips at the event point "
+                        "it was planned for")
+                for jid in ids_fn():
+                    self._data[jid] = reason
+
+    def __len__(self):
+        self._materialize()
+        return len(self._data)
+
+    def __iter__(self):
+        self._materialize()
+        return iter(self._data)
+
+    def __contains__(self, k):
+        self._materialize()
+        return k in self._data
+
+    def __getitem__(self, k):
+        self._materialize()
+        return self._data[k]
+
+    def __setitem__(self, k, v):
+        self._materialize()
+        self._data[k] = v
+
+    def __delitem__(self, k):
+        self._materialize()
+        del self._data[k]
+
+    def __repr__(self):
+        self._materialize()
+        return repr(self._data)
+
+    def copy(self):
+        self._materialize()
+        return dict(self._data)
 
 
 @dataclass

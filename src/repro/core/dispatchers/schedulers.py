@@ -89,13 +89,13 @@ class EasyBackfilling(SchedulerBase):
             if nodes is None:
                 break
             avail[nodes] -= ctx.req[i][None, :]
-            plan.starts.append((ctx.jobs[i], [int(n) for n in nodes]))
+            plan.starts.append((ctx.job(i), [int(n) for n in nodes]))
             i += 1
         if i >= j_total:
             return plan
 
         head = i
-        plan.skips[ctx.jobs[head].id] = "head-blocked"
+        plan.skips[ctx.job_id(head)] = "head-blocked"
 
         # --- 2. shadow time + reservation ------------------------------
         # phase-1 starts are exactly queue indices 0..head-1, in order
@@ -108,7 +108,7 @@ class EasyBackfilling(SchedulerBase):
             # head never fits even with everything released — should have
             # been rejected at submission; be conservative: no backfilling.
             for qi in range(head + 1, j_total):
-                plan.skips[ctx.jobs[qi].id] = "no-shadow"
+                plan.skips[ctx.job_id(qi)] = "no-shadow"
             return plan
         head_nodes = find(head, shadow_avail)
         assert head_nodes is not None
@@ -121,7 +121,7 @@ class EasyBackfilling(SchedulerBase):
             if est_end <= shadow_time:
                 nodes = find(qi, avail)
                 if nodes is None:
-                    plan.skips[ctx.jobs[qi].id] = "no-fit"
+                    plan.skips[ctx.job_id(qi)] = "no-fit"
                     continue
                 avail[nodes] -= ctx.req[qi][None, :]
             else:
@@ -130,11 +130,11 @@ class EasyBackfilling(SchedulerBase):
                 combined = np.minimum(avail, extra)
                 nodes = find(qi, combined)
                 if nodes is None:
-                    plan.skips[ctx.jobs[qi].id] = "would-delay-head"
+                    plan.skips[ctx.job_id(qi)] = "would-delay-head"
                     continue
                 avail[nodes] -= ctx.req[qi][None, :]
                 extra[nodes] -= ctx.req[qi][None, :]
-            plan.starts.append((ctx.jobs[qi], [int(n) for n in nodes]))
+            plan.starts.append((ctx.job(qi), [int(n) for n in nodes]))
         return plan
 
     # ------------------------------------------------------------------

@@ -5,40 +5,70 @@ event kinds: submission (T_sb, from the workload), start (T_st, decided by
 the dispatcher) and completion (T_c = T_st + duration, known only here —
 never exposed to the dispatcher).
 
+Array-native core (DESIGN.md §4): the manager is an *index machine* over
+the :class:`~repro.core.jobtable.JobTable` column store.  The LOADED and
+completion heaps hold plain ``(time, seq, row)`` integer tuples, the
+FIFO queue is a numpy ring buffer of row indices (tombstoned removals,
+one boolean-mask gather per event), and a completion batch releases its
+resources as ONE vectorized scatter-add on ``ResourceManager.available``
+instead of per-job ``release()`` calls.  ``Job`` façades are only
+materialized where the legacy API needs them (dispatcher plans, output
+records, monitors).
+
 Scalability design (paper's headline feature): jobs are pulled
 *incrementally* from the workload source — only jobs whose submission time
 falls inside a sliding look-ahead window are materialized — and completed
-jobs are dropped from memory after their record is written.
+jobs' table rows are recycled after their record is written, so memory
+stays ~flat in workload size.
 """
 from __future__ import annotations
 
 import heapq
-from typing import Callable, Dict, Iterator, List, Optional, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Tuple, Union
+
+import numpy as np
 
 from .job import Job, JobState
+from .jobtable import JobTable, UNSET
 from .resources import ResourceManager
+
+# a workload source yields table row indices (hot path), Job façades
+# (legacy/tests), or anything JobTable.adopt understands
+SourceItem = Union[int, Job]
+
+_EMPTY_ROWS = np.zeros(0, dtype=np.int64)
 
 
 class EventManager:
-    """Owns simulation time, job states, and the event queues."""
+    """Owns simulation time, the job table, and the event queues."""
 
     def __init__(
         self,
-        job_source: Iterator[Job],
+        job_source: Iterator[SourceItem],
         resource_manager: ResourceManager,
         lookahead_jobs: int = 8192,
         on_complete: Optional[Callable[[Job], None]] = None,
+        table: Optional[JobTable] = None,
     ) -> None:
         self.rm = resource_manager
+        self.table = table if table is not None \
+            else JobTable(resource_manager.resource_types)
         self._source = iter(job_source)
         self._lookahead = max(1, lookahead_jobs)
         self._on_complete = on_complete
 
         self.current_time: int = 0
-        self.loaded: List[Tuple[int, int, Job]] = []      # heap of (T_sb, seq, job)
-        self.queue: List[Job] = []                        # FIFO by arrival
-        self.running: Dict[str, Job] = {}
-        self._completions: List[Tuple[int, str]] = []     # heap of (T_c, id)
+        self.loaded: List[Tuple[int, int, int]] = []   # heap (T_sb, seq, row)
+        # FIFO queue as a numpy ring buffer with tombstones: append at
+        # _qtail, arbitrary removal via the row -> position map, one
+        # boolean-mask gather for the whole queue (no per-entry Python)
+        self._qbuf = np.empty(1024, dtype=np.int64)
+        self._qlive = np.zeros(1024, dtype=bool)
+        self._qhead = 0
+        self._qtail = 0
+        self._qpos: Dict[int, int] = {}
+        self._running: set = set()
+        self._completions: List[Tuple[int, int, int]] = []  # (T_c, seq, row)
         self._seq = 0
         self._exhausted = False
         # counters (memory-light aggregates; full records go to the output)
@@ -50,100 +80,236 @@ class EventManager:
     # ------------------------------------------------------------------ load
     def _refill(self) -> None:
         """Incremental job loading: top the LOADED buffer up to the window."""
+        table = self.table
         while not self._exhausted and len(self.loaded) < self._lookahead:
             try:
-                job = next(self._source)
+                item = next(self._source)
             except StopIteration:
                 self._exhausted = True
                 return
-            job.state = JobState.LOADED
-            heapq.heappush(self.loaded, (job.submission_time, self._seq, job))
+            if isinstance(item, (int, np.integer)):
+                row = int(item)
+            else:
+                row = table.adopt(item)
+            table.state[row] = JobState.LOADED
+            heapq.heappush(self.loaded,
+                           (int(table.submit[row]), self._seq, row))
             self._seq += 1
 
     # ------------------------------------------------------------------ time
     def next_event_time(self) -> Optional[int]:
-        cands = []
         if self.loaded:
-            cands.append(self.loaded[0][0])
+            t = self.loaded[0][0]
+            if self._completions and self._completions[0][0] < t:
+                t = self._completions[0][0]
+            return t
         if self._completions:
-            cands.append(self._completions[0][0])
-        return min(cands) if cands else None
+            return self._completions[0][0]
+        return None
 
     def has_events(self) -> bool:
-        return bool(self.loaded or self._completions or self.queue)
+        return bool(self.loaded or self._completions or self._qpos)
+
+    # ------------------------------------------------------------------ queue
+    def _enqueue(self, row: int) -> None:
+        if self._qtail == self._qbuf.shape[0]:
+            self._compact_or_grow()
+        pos = self._qtail
+        self._qbuf[pos] = row
+        self._qlive[pos] = True
+        self._qpos[row] = pos
+        self._qtail = pos + 1
+
+    def _dequeue(self, row: int) -> None:
+        pos = self._qpos.pop(row, None)
+        if pos is None:
+            raise ValueError(f"job {self.table.ids[row]} is not queued")
+        self._qlive[pos] = False
+
+    def _compact_or_grow(self) -> None:
+        live = self.queue_rows()
+        n = live.shape[0]
+        if n >= self._qbuf.shape[0] // 2:
+            cap = self._qbuf.shape[0] * 2
+            self._qbuf = np.empty(cap, dtype=np.int64)
+            self._qlive = np.zeros(cap, dtype=bool)
+        else:
+            self._qlive[:] = False
+        self._qbuf[:n] = live
+        self._qlive[:n] = True
+        self._qpos = {int(r): i for i, r in enumerate(live)}
+        self._qhead = 0
+        self._qtail = n
+
+    # ------------------------------------------------------------------ views
+    @property
+    def n_queued(self) -> int:
+        return len(self._qpos)
+
+    @property
+    def n_running(self) -> int:
+        return len(self._running)
+
+    def queue_rows(self) -> np.ndarray:
+        """int64[J]: queued rows in FIFO arrival order."""
+        head, tail = self._qhead, self._qtail
+        if len(self._qpos) == tail - head:
+            return self._qbuf[head:tail].copy()
+        return self._qbuf[head:tail][self._qlive[head:tail]]
+
+    def running_rows(self) -> np.ndarray:
+        """int64[K]: running rows (unordered)."""
+        return np.fromiter(self._running, dtype=np.int64,
+                           count=len(self._running))
+
+    @property
+    def queue(self) -> List[Job]:
+        """Legacy view: queued jobs as façades, FIFO order (a fresh list —
+        use :meth:`queue_rows` / :attr:`n_queued` on hot paths)."""
+        view = self.table.view
+        return [view(int(r)) for r in self.queue_rows()]
+
+    @property
+    def running(self) -> Dict[str, Job]:
+        """Legacy view: running jobs keyed by id (a fresh dict)."""
+        view = self.table.view
+        out = {}
+        for r in self._running:
+            job = view(r)
+            out[job.id] = job
+        return out
 
     # ------------------------------------------------------------------ step
-    def advance_to(self, t: int) -> Tuple[List[Job], List[Job]]:
+    def advance_to(self, t: int) -> Tuple[List[int], List[int]]:
         """Move simulation time to ``t``; process completions then
         submissions scheduled at (or before) ``t``.
 
-        Returns ``(completed, submitted)`` jobs at this event point.
+        Returns ``(completed_rows, submitted_rows)`` — table row indices.
+        Completed rows are recycled before this returns; any cached
+        façade is detached with its final values.
         """
         assert t >= self.current_time, "time must be monotone"
         self.current_time = t
+        table = self.table
 
-        completed: List[Job] = []
-        while self._completions and self._completions[0][0] <= t:
-            _, jid = heapq.heappop(self._completions)
-            job = self.running.pop(jid)
-            job.state = JobState.COMPLETED
-            self.rm.release(job)
-            self.n_completed += 1
-            completed.append(job)
-            if self._on_complete is not None:
-                self._on_complete(job)
+        completed: List[int] = []
+        comps = self._completions
+        while comps and comps[0][0] <= t:
+            _, _, row = heapq.heappop(comps)
+            self._running.discard(row)
+            table.state[row] = JobState.COMPLETED
+            completed.append(row)
+        if completed:
+            self.rm.release_rows(table, completed)
+            self.n_completed += len(completed)
+            on_complete = self._on_complete
+            for row in completed:
+                if on_complete is not None:
+                    on_complete(table.view(row))
+                table.free_row(row)
 
-        submitted: List[Job] = []
-        while self.loaded and self.loaded[0][0] <= t:
-            _, _, job = heapq.heappop(self.loaded)
-            job.state = JobState.QUEUED
-            job.queued_time = t
-            self.queue.append(job)
+        submitted: List[int] = []
+        loaded = self.loaded
+        while loaded and loaded[0][0] <= t:
+            _, _, row = heapq.heappop(loaded)
+            table.state[row] = JobState.QUEUED
+            table.queued_time[row] = t
+            self._enqueue(row)
             self.n_submitted += 1
-            submitted.append(job)
+            submitted.append(row)
             self._refill()
         return completed, submitted
 
     # ------------------------------------------------------------------ start
-    def start_job(self, job: Job, nodes: List[int]) -> None:
+    def start_job(self, job: Job, nodes) -> None:
         """Execute a dispatching decision: allocate + schedule completion."""
+        if not job.bound or job._table is not self.table:
+            raise ValueError(f"job {job.id} is not managed by this manager")
+        self.start_row(job._row, nodes)
+
+    def start_row(self, row: int, nodes) -> None:
+        table = self.table
+        if row not in self._qpos:
+            raise ValueError(f"job {table.ids[row]} is not queued")
         t = self.current_time
-        self.rm.allocate(job, nodes)
-        job.state = JobState.RUNNING
-        job.start_time = t
-        job.end_time = t + job.duration
-        job.assigned_nodes = list(nodes)
-        self.queue.remove(job)
-        self.running[job.id] = job
-        heapq.heappush(self._completions, (job.end_time, job.id))
+        idx = np.asarray(nodes, dtype=np.int64)
+        # allocate BEFORE dequeuing: a failed allocation (over-commit,
+        # duplicate nodes) must leave the queue untouched
+        self.rm.commit_allocation(table.ids[row], idx, table.req[row],
+                                  int(table.requested_nodes[row]))
+        self._dequeue(row)
+        table.state[row] = JobState.RUNNING
+        table.start_time[row] = t
+        end = t + int(table.duration[row])
+        table.end_time[row] = end
+        table._assigned[row] = idx
+        self._running.add(row)
+        heapq.heappush(self._completions, (end, self._seq, row))
+        self._seq += 1
 
     def reject_job(self, job: Job) -> None:
-        job.state = JobState.REJECTED
-        self.queue.remove(job)
+        if not job.bound or job._table is not self.table:
+            raise ValueError(f"job {job.id} is not managed by this manager")
+        self.reject_row(job._row)
+
+    def reject_row(self, row: int) -> None:
+        table = self.table
+        self._dequeue(row)
+        table.state[row] = JobState.REJECTED
         self.n_rejected += 1
         if self._on_complete is not None:
-            self._on_complete(job)
+            self._on_complete(table.view(row))
+        table.free_row(row)
+
+    def requeue_job(self, job: Job) -> None:
+        """Pull a RUNNING job back into the queue (node failure /
+        checkpoint-restart path): release its resources, cancel its
+        completion event, reset its start/end state."""
+        if not job.bound or job._table is not self.table:
+            raise ValueError(f"job {job.id} is not managed by this manager")
+        row = job._row
+        if row not in self._running:
+            raise ValueError(f"job {job.id} is not running")
+        table = self.table
+        self._running.discard(row)
+        self._completions = [(e, s, r) for e, s, r in self._completions
+                             if r != row]
+        heapq.heapify(self._completions)
+        self.rm.release_allocation(table.assigned(row), table.req[row])
+        table.state[row] = JobState.QUEUED
+        table.start_time[row] = UNSET
+        table.end_time[row] = UNSET
+        table._assigned.pop(row, None)
+        self._enqueue(row)
 
     # ------------------------------------------------------------------ views
     def system_status(self) -> Dict[str, object]:
         """Current system status exposed to dispatchers & the monitor tool."""
         return {
             "time": self.current_time,
-            "queued": len(self.queue),
-            "running": len(self.running),
+            "queued": self.n_queued,
+            "running": self.n_running,
             "completed": self.n_completed,
             "rejected": self.n_rejected,
             "submitted": self.n_submitted,
             "resources": self.rm.snapshot(),
         }
 
+    def release_times(self) -> Tuple[np.ndarray, np.ndarray]:
+        """``(rows, est_release)`` for running jobs — dispatcher view:
+        walltime estimates, never true durations; a job may overrun its
+        estimate, so from 'now' it releases no earlier than the next
+        tick."""
+        if not self._running:
+            return _EMPTY_ROWS, _EMPTY_ROWS
+        rows = self.running_rows()
+        table = self.table
+        est = table.start_time[rows] + \
+            np.maximum(table.expected_duration[rows], 1)
+        return rows, np.maximum(est, self.current_time + 1)
+
     def running_release_times(self) -> List[Tuple[int, Job]]:
-        """(estimated release time, job) for running jobs — dispatcher view:
-        uses walltime estimates, never true durations."""
-        out = []
-        for job in self.running.values():
-            est = job.start_time + max(job.expected_duration, 1)
-            # a job may overrun its estimate; from 'now' it releases no
-            # earlier than the next tick
-            out.append((max(est, self.current_time + 1), job))
-        return out
+        """Legacy view: (estimated release time, job façade) pairs."""
+        rows, est = self.release_times()
+        view = self.table.view
+        return [(int(t), view(int(r))) for r, t in zip(rows, est)]

@@ -44,8 +44,8 @@ class UtilizationMonitor:
         self.times.append(em.current_time)
         for rt, u in em.rm.utilization().items():
             self.util.setdefault(rt, []).append(u)
-        self.queued.append(len(em.queue))
-        self.running.append(len(em.running))
+        self.queued.append(em.n_queued)
+        self.running.append(em.n_running)
 
     def as_dict(self) -> Dict[str, object]:
         return {

@@ -6,11 +6,20 @@
 Design notes mirroring the paper:
   * discrete event loop over submission/completion times (never ticks
     through empty seconds);
-  * incremental job loading through the reader (LOADED window) and removal
-    of completed jobs — memory stays ~flat w.r.t. workload size;
+  * incremental job loading through the reader (LOADED window) and
+    recycling of completed jobs' table rows — memory stays ~flat w.r.t.
+    workload size;
   * two output streams: per-job dispatching records, and per-event-point
     simulator performance records (CPU time split dispatch vs other, RSS);
   * optional monitors + additional-data hooks.
+
+Array-native core (DESIGN.md §4): workload records stream STRAIGHT into
+``JobTable`` rows (``JobFactory.fill_row``) — a per-job ``Job`` object is
+only built where the legacy API demands one.  The per-event capacity
+sanity check runs as one batched numpy expression over the newly
+submitted rows (all queued rows when additional-data hooks may have
+mutated capacity), and dispatch decisions execute through the row-index
+fast path.
 """
 from __future__ import annotations
 
@@ -34,6 +43,7 @@ from .dispatchers.base import Dispatcher, SchedulerBase
 from .dispatchers.context import DispatchContext
 from .events import EventManager
 from .job import Job, JobFactory, swf_resource_mapper
+from .jobtable import JobTable
 from .monitors import SystemStatus, UtilizationMonitor
 from .resources import ResourceManager
 
@@ -41,7 +51,7 @@ from .resources import ResourceManager
 class Simulator:
     def __init__(
         self,
-        workload: Union[str, Iterable[Job]],
+        workload: Union[str, Iterable],
         sys_config: Union[str, Dict],
         dispatcher: Union[Dispatcher, SchedulerBase],
         job_factory: Optional[JobFactory] = None,
@@ -64,28 +74,32 @@ class Simulator:
         if job_factory is None:
             # default: SWF totals -> node-spanning request, sized by the
             # densest node group of this system
-            cores = int(max(self.rm.capacity[:, self.rm.resource_types.index("core")]))\
-                if "core" in self.rm.resource_types else 1
-            mem_i = self.rm.resource_types.index("mem") if "mem" in self.rm.resource_types else None
+            cores = int(max(self.rm.capacity[:, self.rm.rt_index["core"]]))\
+                if "core" in self.rm.rt_index else 1
+            mem_i = self.rm.rt_index.get("mem")
             mem = int(max(self.rm.capacity[:, mem_i])) if mem_i is not None else 0
             job_factory = JobFactory(swf_resource_mapper(cores, mem))
         self.job_factory = job_factory
 
     # ------------------------------------------------------------------
-    def _job_iterator(self) -> Iterator[Job]:
+    def _row_iterator(self, table: JobTable) -> Iterator:
+        """Stream the workload into the job table: records become rows
+        directly (no per-job ``Job`` object); pre-built ``Job`` instances
+        pass through for the event manager to adopt."""
         wl = self._workload
+        fill = self.job_factory.fill_row
         if isinstance(wl, str):
             from ..workloads.swf import SWFReader
 
             reader = SWFReader(wl)
             for rec in reader:
-                yield self.job_factory.from_record(rec)
+                yield fill(table, rec)
         else:
             for item in wl:
                 if isinstance(item, Job):
                     yield item
                 else:
-                    yield self.job_factory.from_record(item)
+                    yield fill(table, item)
 
     # ------------------------------------------------------------------
     def start_simulation(
@@ -106,15 +120,20 @@ class Simulator:
         sched = self.dispatcher.scheduler
         observe = getattr(sched, "observe_completion", None)
 
-        def on_complete(job: Job) -> None:
-            if observe is not None and job.state.name == "COMPLETED":
-                observe(job)         # data-driven dispatchers learn online
-            if out_fh is not None:
-                out_fh.write(_dumps(job.to_record()) + b"\n")
+        if observe is None and out_fh is None:
+            on_complete = None        # nothing to do -> skip façades entirely
+        else:
+            def on_complete(job: Job) -> None:
+                if observe is not None and job.state.name == "COMPLETED":
+                    observe(job)      # data-driven dispatchers learn online
+                if out_fh is not None:
+                    out_fh.write(_dumps(job.to_record()) + b"\n")
 
+        table = JobTable(self.rm.resource_types)
         em = EventManager(
-            self._job_iterator(), self.rm,
-            lookahead_jobs=self._lookahead, on_complete=on_complete)
+            self._row_iterator(table), self.rm,
+            lookahead_jobs=self._lookahead, on_complete=on_complete,
+            table=table)
         self.event_manager = em
 
         status = SystemStatus() if system_status else None
@@ -140,32 +159,39 @@ class Simulator:
             for ad in adata:
                 ad_t = ad.next_event_time()
                 if ad_t is not None and ad_t > em.current_time and \
-                        (t is None or ad_t < t) and (em.running or em.queue):
+                        (t is None or ad_t < t) and (em.n_running or em.n_queued):
                     t = ad_t
             if t is None:
-                if em.queue:
+                if em.n_queued:
                     # queued jobs remain but no event can free resources and
                     # no submissions remain -> they can never start (they
                     # were capacity-checked, so this means a livelock from
                     # failed nodes); reject to terminate cleanly.
-                    for job in list(em.queue):
-                        em.reject_job(job)
+                    for row in em.queue_rows():
+                        em.reject_row(int(row))
                 break
-            em.advance_to(t)
+            _, submitted = em.advance_to(t)
 
             ad_view = {}
             for ad in adata:
                 ad_view[ad.name] = ad.update(em)
             self.additional_view = ad_view
 
-            # capacity sanity: reject jobs that can never fit this system
-            for job in list(em.queue):
-                if not self.rm.fits_system(job):
-                    em.reject_job(job)
+            # capacity sanity: reject jobs that can never fit this system.
+            # Capacity only changes through additional-data hooks (node
+            # failures), so without them only NEW submissions need the
+            # check — one batched numpy expression either way.
+            check_rows = em.queue_rows() if adata else submitted
+            if len(check_rows):
+                unfit = self.rm.unfit_rows(em.table, check_rows,
+                                           assume_static_capacity=not adata)
+                for row in unfit:
+                    em.reject_row(int(row))
 
-            d0 = time.perf_counter()
             dt_launches = 0
-            if em.queue:
+            dt_dispatch = 0.0
+            if em.n_queued:
+                d0 = time.perf_counter()
                 # one frozen context per event point; the dispatcher
                 # answers with a DispatchPlan (batched protocol)
                 ctx = DispatchContext.from_event_manager(t, em)
@@ -178,8 +204,8 @@ class Simulator:
                 dt_launches = int(plan.stats.get("kernel_launches", 0))
                 kernel_launches_total += dt_launches
                 n_dispatch_events += 1
-            dt_dispatch = time.perf_counter() - d0
-            dispatch_total += dt_dispatch
+                dt_dispatch = time.perf_counter() - d0
+                dispatch_total += dt_dispatch
 
             if status is not None:
                 self.last_status = status.query(em)
@@ -193,8 +219,8 @@ class Simulator:
                 if bench_fh is not None:
                     bench_fh.write(_dumps({
                         "t": t,
-                        "queue": len(em.queue),
-                        "running": len(em.running),
+                        "queue": em.n_queued,
+                        "running": em.n_running,
                         "dispatch_s": dt_dispatch,
                         "kernel_launches": dt_launches,
                         "rss_mb": rss,

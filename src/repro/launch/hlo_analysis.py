@@ -15,7 +15,7 @@ constant), recursively, yielding corrected totals for:
     all-to-all / collective-permute), with ring-model link-traffic
     factors applied per participant-group size.
 
-Caveat (DESIGN.md §5): this analyzes the CPU-backend HLO; TPU fusion
+Caveat (DESIGN.md §6): this analyzes the CPU-backend HLO; TPU fusion
 granularity differs, so *bytes* are an upper-bound proxy while *FLOPs*
 and *collective bytes* are layout-independent and transfer directly.
 """

@@ -1,6 +1,6 @@
 """Mixture-of-Experts FFN: sort-based grouped dispatch (TPU-native).
 
-Design (DESIGN.md §4): tokens are processed in fixed-size routing groups
+Design (DESIGN.md §5): tokens are processed in fixed-size routing groups
 (sharded over the data axes); within a group, (token, expert) slots are
 sorted by expert id, truncated to a per-expert capacity, gathered into an
 ``[E, C, d]`` buffer, pushed through batched expert matmuls (the only

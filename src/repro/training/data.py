@@ -2,7 +2,7 @@
 
 Every batch is a pure function of ``(seed, step)`` — after a checkpoint
 restart the pipeline replays identically (restart-exact training, the
-fault-tolerance contract of DESIGN.md §6).  Two generators:
+fault-tolerance contract of DESIGN.md §7).  Two generators:
 
 * ``synthetic_lm_batch`` — uniform random tokens (throughput/dry-run work);
 * ``copy_task_batch``   — second half of each sequence repeats the first

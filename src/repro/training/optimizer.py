@@ -5,7 +5,7 @@
 * optional gradient compression with error feedback (bf16 cast before the
   cross-replica reduction; the feedback buffer keeps the quantization
   error from accumulating) — the paper-era "distributed optimization
-  trick" hook (DESIGN.md §6);
+  trick" hook (DESIGN.md §7);
 * cosine LR schedule with linear warmup.
 
 Pure-functional: state is a pytree, update is jit-safe, nothing here

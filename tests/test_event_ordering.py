@@ -1,0 +1,115 @@
+"""Event-ordering semantics of the EventManager (paper §3).
+
+The contract the dispatcher relies on at every event point:
+
+1. completions at time t are processed BEFORE submissions at time t;
+2. capacity released by those completions is visible to the dispatcher
+   at the same event point (a job submitted at t can start at t on the
+   nodes a job that completed at t just freed);
+3. within one event point, same-timestamp submissions enter the queue in
+   workload order (stable FIFO).
+"""
+import numpy as np
+import pytest
+
+from repro.core import EventManager, Job, JobState, ResourceManager
+from repro.core.dispatchers import FirstFit, FirstInFirstOut
+from repro.core.dispatchers.base import Dispatcher
+from repro.core.dispatchers.context import DispatchContext
+
+ONE_NODE = {"groups": {"g": {"core": 4}}, "nodes": {"g": 1}}
+
+
+def _job(jid, submit, duration, cores=4, nodes=1):
+    return Job(id=jid, user_id=0, submission_time=submit, duration=duration,
+               expected_duration=duration, requested_nodes=nodes,
+               requested_resources={"core": cores})
+
+
+def test_completions_processed_before_same_time_submissions():
+    """A completes exactly when B is submitted: at that event point A
+    must already be COMPLETED (resources back) before B is queued."""
+    rm = ResourceManager(ONE_NODE)
+    a = _job("a", 0, 10)
+    b = _job("b", 10, 5)
+    em = EventManager(iter([a, b]), rm)
+    em.advance_to(0)
+    em.start_job(a, [0])
+    assert em.next_event_time() == 10        # A's completion == B's submission
+    completed, submitted = em.advance_to(10)
+    assert len(completed) == 1 and len(submitted) == 1
+    # A fully released before B entered the queue
+    assert a.state == JobState.COMPLETED
+    assert b.state == JobState.QUEUED
+    assert np.all(rm.available == rm.capacity)
+
+
+def test_released_capacity_visible_to_dispatcher_at_event_point():
+    """The dispatcher's context at the A-completes/B-arrives event must
+    show the released capacity, so B starts with zero waiting."""
+    rm = ResourceManager(ONE_NODE)
+    jobs = [_job("a", 0, 10), _job("b", 10, 5)]
+    em = EventManager(iter(jobs), rm)
+    disp = Dispatcher(FirstInFirstOut(FirstFit()))
+    starts = {}
+    while em.has_events():
+        t = em.next_event_time()
+        if t is None:
+            break
+        em.advance_to(t)
+        if em.n_queued:
+            plan = disp.plan(DispatchContext.from_event_manager(t, em))
+            for job, nodes in plan.starts:
+                em.start_job(job, nodes)
+                starts[job.id] = t
+    assert starts == {"a": 0, "b": 10}       # b waits 0s: freed at its T_sb
+
+
+def test_same_timestamp_submissions_keep_workload_order():
+    rm = ResourceManager({"groups": {"g": {"core": 4}}, "nodes": {"g": 8}})
+    jobs = [_job(f"j{i}", 100, 10) for i in range(6)]
+    em = EventManager(iter(jobs), rm)
+    em.advance_to(100)
+    assert [j.id for j in em.queue] == [f"j{i}" for i in range(6)]
+    # and the context's row order matches the façade order
+    ctx = DispatchContext.from_event_manager(100, em)
+    assert [ctx.job_id(i) for i in range(6)] == [f"j{i}" for i in range(6)]
+
+
+def test_multiple_completions_one_event_released_as_batch():
+    """Several jobs completing at the same instant release as one batch;
+    availability is exactly restored."""
+    rm = ResourceManager({"groups": {"g": {"core": 4}}, "nodes": {"g": 4}})
+    jobs = [_job(f"j{i}", 0, 50, cores=4) for i in range(4)]
+    em = EventManager(iter(jobs), rm)
+    em.advance_to(0)
+    for i, j in enumerate(em.queue):
+        em.start_job(j, [i])
+    assert np.all(rm.available == 0)
+    completed, _ = em.advance_to(50)
+    assert len(completed) == 4
+    assert em.n_completed == 4 and em.n_running == 0
+    assert np.all(rm.available == rm.capacity)
+
+
+def test_overrunning_estimate_never_releases_in_past():
+    """Dispatcher-visible release times are clamped to now+1 when a job
+    overruns its walltime estimate."""
+    rm = ResourceManager(ONE_NODE)
+    a = Job(id="a", user_id=0, submission_time=0, duration=100,
+            expected_duration=10, requested_nodes=1,
+            requested_resources={"core": 4})
+    em = EventManager(iter([a]), rm)
+    em.advance_to(0)
+    em.start_job(a, [0])
+    em.advance_to(50)                         # estimate (10) long blown
+    [(t, job)] = em.running_release_times()
+    assert job.id == "a" and t == 51
+
+
+def test_event_loop_never_moves_backwards():
+    rm = ResourceManager(ONE_NODE)
+    em = EventManager(iter([_job("a", 5, 10)]), rm)
+    em.advance_to(5)
+    with pytest.raises(AssertionError):
+        em.advance_to(4)

@@ -1,0 +1,180 @@
+"""JobTable SoA store + Job row-view façade (DESIGN.md §4)."""
+import numpy as np
+import pytest
+
+from repro.core import (EventManager, Job, JobState, JobTable,
+                        ResourceManager, Simulator)
+from repro.core.dispatchers import FirstFit, FirstInFirstOut
+from repro.workloads.synthetic import SyntheticWorkload
+
+SYS = {"groups": {"g": {"core": 4, "mem": 512}}, "nodes": {"g": 4}}
+
+
+def _job(jid="a", **kw):
+    base = dict(id=jid, user_id=3, submission_time=7, duration=20,
+                expected_duration=30, requested_nodes=2,
+                requested_resources={"core": 2, "mem": 128})
+    base.update(kw)
+    return Job(**base)
+
+
+# ---------------------------------------------------------------- façade
+def test_detached_job_behaves_like_the_old_dataclass():
+    j = _job()
+    assert (j.id, j.user_id, j.submission_time) == ("a", 3, 7)
+    assert j.state == JobState.LOADED and j.queued_time is None
+    j.start_time = 10
+    j.end_time = 30
+    assert j.waiting_time == 3 and j.slowdown == (3 + 20) / 20
+    rec = j.to_record()
+    assert rec["resources"] == {"core": 2, "mem": 128}
+    assert rec["state"] == "LOADED"
+
+
+def test_job_validation_matches_legacy():
+    with pytest.raises(ValueError):
+        _job(duration=-1)
+    with pytest.raises(ValueError):
+        _job(requested_nodes=0)
+    assert _job(expected_duration=-5).expected_duration == 20   # fallback
+
+
+def test_adopt_binds_and_table_becomes_authoritative():
+    t = JobTable(["core", "mem"])
+    j = _job()
+    row = t.adopt(j)
+    assert j.bound and t.view(row) is j
+    assert np.all(t.req[row] == [2, 128])
+    j.duration = 99                       # write-through
+    assert t.duration[row] == 99
+    t.duration[row] = 5                   # column write visible via façade
+    assert j.duration == 5
+
+
+def test_free_row_detaches_with_final_values_and_recycles():
+    t = JobTable(["core"])
+    j = _job(requested_resources={"core": 1})
+    row = t.adopt(j)
+    j.state = JobState.COMPLETED
+    j.start_time, j.end_time = 10, 30
+    t.free_row(row)
+    # held reference keeps its final values after the row is recycled
+    assert not j.bound
+    assert j.state == JobState.COMPLETED and j.end_time == 30
+    row2 = t.add(id="x", user_id=0, submission_time=0, duration=1,
+                 expected_duration=1, requested_nodes=1,
+                 requested_resources={"core": 1})
+    assert row2 == row                    # recycled
+    assert j.id == "a"                    # detached view untouched by reuse
+    assert t.n_live == 1
+
+
+def test_unknown_resource_rejected_at_load_time():
+    t = JobTable(["core"])
+    with pytest.raises(KeyError):
+        t.adopt(_job(requested_resources={"gpu": 1}))
+
+
+def test_table_grows_transparently():
+    t = JobTable(["core"], initial_capacity=16)
+    rows = [t.add(id=str(i), user_id=0, submission_time=i, duration=1,
+                  expected_duration=1, requested_nodes=1,
+                  requested_resources={"core": 1}) for i in range(100)]
+    assert t.capacity_rows >= 100
+    assert [t.ids[r] for r in rows] == [str(i) for i in range(100)]
+    assert np.all(t.submit[rows] == np.arange(100))
+
+
+# ---------------------------------------------------------------- memory
+def test_row_recycling_bounds_table_size():
+    """1000 jobs through a tiny lookahead window: the table must stay at
+    O(window), not O(workload)."""
+    rm = ResourceManager(SYS)
+    wl = SyntheticWorkload(1000, seed=3, mean_interarrival_s=100.0,
+                           duration_median_s=50.0, duration_sigma=0.5,
+                           node_weights={1: 1.0},
+                           resources={"core": (1, 2), "mem": (32, 64)})
+    from repro.core.job import JobFactory
+    sim = Simulator(wl, SYS, FirstInFirstOut(FirstFit()),
+                    job_factory=JobFactory(), lookahead_jobs=32,
+                    output_dir="results/test_jobtable")
+    sim.start_simulation(write_output=False)
+    assert sim.summary["completed"] == 1000
+    table = sim.event_manager.table
+    assert table.n_added == 1000
+    assert table.n_live == 0              # everything recycled
+    assert table.capacity_rows == 1024    # never grew past the initial size
+
+
+# ---------------------------------------------------------------- manager
+def test_requeue_returns_job_to_fifo_tail():
+    rm = ResourceManager(SYS)
+    a, b = _job("a"), _job("b", submission_time=8)
+    em = EventManager(iter([a, b]), rm)
+    em.advance_to(8)
+    em.start_job(a, [0, 1])
+    em.requeue_job(a)
+    assert a.state == JobState.QUEUED and a.start_time is None
+    assert [j.id for j in em.queue] == ["b", "a"]
+    assert np.all(rm.available == rm.capacity)
+    assert em.n_running == 0
+
+
+def test_lazy_skips_visible_through_dict_protocol():
+    """Deferred 'blocked' labels must be seen by every consumer path —
+    dict(), unpacking, equality — not only direct method calls."""
+    rm = ResourceManager(SYS)
+    jobs = [_job(str(i), requested_nodes=4,
+                 requested_resources={"core": 4, "mem": 512})
+            for i in range(5)]
+    em = EventManager(iter(jobs), rm)
+    em.advance_to(7)
+    sched = FirstInFirstOut(FirstFit())
+    from repro.core.dispatchers.context import DispatchContext
+    plan = sched.plan(DispatchContext.from_event_manager(7, em))
+    # one job fills the system; the rest are one no-fit + blocked tail
+    blocked = {k: v for k, v in dict(plan.skips).items() if v == "blocked"}
+    assert len(blocked) == 3
+    assert {**plan.skips} == dict(plan.skips) == plan.skips.copy()
+
+
+def test_lazy_skips_raise_after_rows_recycled():
+    """Reading plan.skips after the blocked jobs' rows were recycled
+    must fail loudly instead of resolving another job's id."""
+    rm = ResourceManager(SYS)
+    jobs = [_job(str(i), requested_nodes=4,
+                 requested_resources={"core": 4, "mem": 512})
+            for i in range(4)]
+    em = EventManager(iter(jobs), rm)
+    em.advance_to(7)
+    sched = FirstInFirstOut(FirstFit())
+    from repro.core.dispatchers.context import DispatchContext
+    plan = sched.plan(DispatchContext.from_event_manager(7, em))
+    for row in em.queue_rows():           # recycle every blocked row
+        em.reject_row(int(row))
+    with pytest.raises(RuntimeError):
+        dict(plan.skips)
+
+
+def test_request_vector_returns_fresh_array():
+    rm = ResourceManager(SYS)
+    j = _job("a")
+    em = EventManager(iter([j]), rm)
+    em.advance_to(7)
+    vec = rm.request_vector(j)
+    vec[:] = 0                            # caller scratch must not leak
+    assert np.all(em.table.req[j._row] == rm.request_vector(j))
+    assert rm.request_vector(j)[em.table.rt_index["core"]] == 2
+
+
+def test_start_requires_queued_job():
+    rm = ResourceManager(SYS)
+    a = _job("a")
+    em = EventManager(iter([a]), rm)
+    em.advance_to(7)
+    em.start_job(a, [0, 1])
+    with pytest.raises(ValueError):
+        em.start_job(a, [2, 3])           # already running
+    foreign = _job("f")
+    with pytest.raises(ValueError):
+        em.reject_job(foreign)            # never adopted by this manager

@@ -52,6 +52,70 @@ def test_reader_max_jobs(tmp_path):
     assert len(recs) == 2
 
 
+def test_reader_short_but_parseable_lines_padded(tmp_path):
+    """Lines with >= 5 but < 18 fields are padded with -1, not skipped."""
+    p = os.path.join(str(tmp_path), "short.swf")
+    with open(p, "w") as fh:
+        fh.write("7 5 0 120 2\n")          # only 5 fields
+    reader = SWFReader(p)
+    recs = list(reader)
+    assert reader.skipped == 0
+    assert len(recs) == 1
+    r = recs[0]
+    assert r["id"] == 7 and r["duration"] == 120
+    assert r["requested_processors"] == 2  # falls back to allocated procs
+    assert r["expected_duration"] == 120   # REQ_T=-1 pad -> runtime
+    assert r["requested_memory"] == 0
+
+
+def test_reader_skip_reasons_each_counted(tmp_path):
+    """Every malformed/filtered line counts in ``skipped``: too few
+    fields, non-numeric, negative runtime, zero processors, negative
+    submit."""
+    lines = [
+        "1 2 3",                                              # < 5 fields
+        "x y z w v u t s r q p o n m l k j i",                # non-numeric
+        "2 10 0 -7 4 -1 -1 4 100 -1 1 1 1 1 1 -1 -1 -1",      # runtime < 0
+        "3 10 0 50 0 -1 -1 0 100 -1 1 1 1 1 1 -1 -1 -1",      # procs <= 0
+        "4 -5 0 50 4 -1 -1 4 100 -1 1 1 1 1 1 -1 -1 -1",      # submit < 0
+        "5 10 0 50 4 -1 -1 4 100 -1 1 1 1 1 1 -1 -1 -1",      # valid
+    ]
+    p = os.path.join(str(tmp_path), "bad.swf")
+    with open(p, "w") as fh:
+        fh.write("\n".join(lines) + "\n")
+    reader = SWFReader(p)
+    recs = list(reader)
+    assert [r["id"] for r in recs] == [5]
+    assert reader.skipped == 5
+
+
+def test_reader_max_jobs_counts_only_yielded(tmp_path):
+    """``max_jobs`` limits YIELDED records — skipped lines in between do
+    not consume the budget."""
+    lines = [
+        "1 0 0 10 1 -1 -1 1 20 -1 1 1 1 1 1 -1 -1 -1",        # valid
+        "2 1 0 -1 1 -1 -1 1 20 -1 1 1 1 1 1 -1 -1 -1",        # skipped
+        "garbage",                                             # skipped
+        "3 2 0 10 1 -1 -1 1 20 -1 1 1 1 1 1 -1 -1 -1",        # valid
+        "4 3 0 10 1 -1 -1 1 20 -1 1 1 1 1 1 -1 -1 -1",        # valid (cut)
+    ]
+    p = os.path.join(str(tmp_path), "maxed.swf")
+    with open(p, "w") as fh:
+        fh.write("\n".join(lines) + "\n")
+    reader = SWFReader(p, max_jobs=2)
+    recs = list(reader)
+    assert [r["id"] for r in recs] == [1, 3]
+    assert reader.skipped == 2
+
+
+def test_reader_skipped_resets_per_iteration(tmp_path):
+    p = write_sample(str(tmp_path))
+    reader = SWFReader(p)
+    list(reader)
+    list(reader)
+    assert reader.skipped == 3             # not accumulated across passes
+
+
 def test_writer_roundtrip(tmp_path):
     p = write_sample(str(tmp_path))
     recs = list(SWFReader(p))

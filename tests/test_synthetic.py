@@ -1,0 +1,80 @@
+"""SyntheticWorkload: determinism, distribution shape, simulator use."""
+import math
+
+import pytest
+
+from repro.core import Simulator
+from repro.core.job import JobFactory
+from repro.core.dispatchers import FirstFit, ShortestJobFirst
+from repro.workloads import SyntheticWorkload
+
+SYS = {"groups": {"g": {"core": 4, "mem": 1024}}, "nodes": {"g": 32}}
+
+
+def test_stream_is_deterministic_and_repeatable():
+    a = SyntheticWorkload(200, seed=5)
+    b = SyntheticWorkload(200, seed=5)
+    ra, rb = list(a), list(b)
+    assert ra == rb
+    assert ra == list(a)                  # re-iterating yields the same
+    assert list(SyntheticWorkload(200, seed=6)) != ra
+
+
+def test_records_are_sorted_valid_and_dual_representation():
+    recs = list(SyntheticWorkload(500, seed=1, cores_per_node=4))
+    subs = [r["submit"] for r in recs]
+    assert subs == sorted(subs)
+    for r in recs:
+        assert r["duration"] >= 1
+        assert r["expected_duration"] >= r["duration"]
+        assert r["requested_nodes"] >= 1
+        per_node = r["requested_resources"]
+        assert set(per_node) == {"core", "mem"}
+        # SWF-style totals stay consistent with the per-node form
+        assert r["requested_processors"] == per_node["core"] * r["requested_nodes"]
+        assert r["requested_memory"] == per_node["mem"] * r["requested_nodes"]
+
+
+def test_poisson_and_lognormal_parameters_respected():
+    n = 4000
+    wl = SyntheticWorkload(n, seed=9, mean_interarrival_s=50.0,
+                           duration_median_s=300.0, duration_sigma=0.8,
+                           over_estimate=(1.0, 1.0))
+    recs = list(wl)
+    mean_gap = recs[-1]["submit"] / n
+    assert 45 <= mean_gap <= 55           # Poisson arrivals: mean ~50s
+    durations = sorted(r["duration"] for r in recs)
+    median = durations[n // 2]
+    assert 250 <= median <= 350           # lognormal median ~300s
+    # exact estimates when over_estimate is (1, 1)
+    assert all(r["expected_duration"] == r["duration"] for r in recs)
+
+
+def test_node_weights_shape_the_distribution():
+    wl = SyntheticWorkload(3000, seed=2, node_weights={1: 0.8, 4: 0.2})
+    counts = {}
+    for r in wl:
+        counts[r["requested_nodes"]] = counts.get(r["requested_nodes"], 0) + 1
+    assert set(counts) == {1, 4}
+    assert 0.7 < counts[1] / 3000 < 0.9
+
+
+def test_invalid_parameters_raise():
+    with pytest.raises(ValueError):
+        SyntheticWorkload(0)
+    with pytest.raises(ValueError):
+        SyntheticWorkload(10, mean_interarrival_s=0)
+    with pytest.raises(ValueError):
+        SyntheticWorkload(10, node_weights={1: 0.0})
+
+
+def test_usable_as_simulator_workload_source(tmp_path):
+    wl = SyntheticWorkload(300, seed=4, mean_interarrival_s=20.0,
+                           duration_median_s=120.0,
+                           node_weights={1: 0.7, 2: 0.3},
+                           resources={"core": (1, 4), "mem": (64, 512)})
+    sim = Simulator(wl, SYS, ShortestJobFirst(FirstFit()),
+                    job_factory=JobFactory(), output_dir=str(tmp_path))
+    sim.start_simulation(write_output=False)
+    assert sim.summary["completed"] == 300
+    assert sim.summary["rejected"] == 0

@@ -36,7 +36,7 @@ from repro.core.job import JobFactory
 from repro.core.simulator import Simulator
 from repro.workloads.synthetic import SyntheticWorkload
 
-from .common import emit
+from .common import bench_metadata, emit
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -119,6 +119,7 @@ def run(out_dir: str, quick: bool = False) -> Dict:
         "sizes": list(sizes),
         "headline_cell": f"contended/FIFO-FF/{CONTENDED_JOBS}",
         "cells": cells,
+        "env": bench_metadata(),
     }
 
     base_path = os.path.join(REPO_ROOT, "BENCH_core_baseline.json")

@@ -24,7 +24,7 @@ from typing import Dict, Iterator, List, Tuple
 from repro.core.job import Job
 from repro.core.simulator import Simulator
 
-from .common import emit
+from .common import bench_metadata, emit
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -122,6 +122,7 @@ def run(out_dir: str, quick: bool = False) -> Dict:
                     f"{by_engine['batched']['jobs']}",
         "speedup_batched_vs_per_job": round(speedup, 2),
         "cells": cells,
+        "env": bench_metadata(),
     }
     path = os.path.join(REPO_ROOT, "BENCH_dispatch.json")
     with open(path, "w") as fh:

@@ -1,0 +1,143 @@
+"""Fleet engine throughput — whole dispatcher×seed grids in one launch.
+
+The claim under test (DESIGN.md §8): once the event loop is compiled and
+vmapped, simulating a GRID costs barely more than simulating one member,
+so aggregate events/s scales with grid width while the serial host
+engine pays full price per grid point.  Both engines run the identical
+grid (every scheduler × every seed, same workloads, same system) and
+the bench cross-checks their per-sim outcomes before reporting:
+
+* ``host``  — one ``Simulator`` run per grid point, back to back;
+* ``fleet`` — ONE ``FleetRunner.run`` over the stacked grid (compile
+  time reported separately: it is paid once per grid *shape*, not per
+  grid point, and jax's persistent cache amortizes it across runs).
+
+Writes ``BENCH_fleet.json`` at the repo root (full grid: 3 schedulers ×
+12 seeds = 36 sims; ``--quick``: 3 × 2 on a shorter workload — the CI
+smoke).
+
+    PYTHONPATH=src python -m benchmarks.run --fleet           # full grid
+    PYTHONPATH=src python -m benchmarks.run --fleet --quick   # CI smoke
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+from repro.core.dispatchers import (FirstFit, FirstInFirstOut,
+                                    LongestJobFirst, ShortestJobFirst)
+from repro.core.job import JobFactory
+from repro.core.simulator import Simulator
+from repro.fleet import SCHED_FIFO, SCHED_LJF, SCHED_SJF, FleetRunner
+from repro.workloads.synthetic import SyntheticWorkload
+
+from .common import bench_metadata, emit
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SYSTEM = {"groups": {"a": {"core": 4, "mem": 1024},
+                     "b": {"core": 8, "mem": 2048}},
+          "nodes": {"a": 6, "b": 4}}
+
+GRID = [("FIFO-FF", SCHED_FIFO, lambda: FirstInFirstOut(FirstFit())),
+        ("SJF-FF", SCHED_SJF, lambda: ShortestJobFirst(FirstFit())),
+        ("LJF-FF", SCHED_LJF, lambda: LongestJobFirst(FirstFit()))]
+
+BASE_SEED = 29
+N_SEEDS_FULL = 12          # 3 x 12 = 36 sims (the >=32-sim grid)
+N_SEEDS_QUICK = 2
+JOBS_FULL = 400
+JOBS_QUICK = 120
+
+
+def _workload(n_jobs: int, seed: int) -> SyntheticWorkload:
+    return SyntheticWorkload(
+        n_jobs, seed=seed, mean_interarrival_s=25.0,
+        duration_median_s=900.0, duration_sigma=1.1,
+        node_weights={1: 0.5, 2: 0.3, 4: 0.2},
+        resources={"core": (1, 4), "mem": (64, 1024)})
+
+
+def run(out_dir: str, quick: bool = False) -> Dict:
+    os.makedirs(out_dir, exist_ok=True)
+    n_seeds = N_SEEDS_QUICK if quick else N_SEEDS_FULL
+    n_jobs = JOBS_QUICK if quick else JOBS_FULL
+    grid = [(f"{tag}-s{BASE_SEED + i}", code, mk, BASE_SEED + i)
+            for tag, code, mk in GRID for i in range(n_seeds)]
+
+    # --- serial host baseline: one Simulator per grid point -----------
+    host_outcomes: List[Dict] = []
+    t0 = time.time()
+    for name, _, mk, seed in grid:
+        sim = Simulator(_workload(n_jobs, seed), SYSTEM, mk(),
+                        job_factory=JobFactory(), output_dir=out_dir,
+                        name=f"fleetbench-{name}")
+        sim.start_simulation(write_output=False)
+        s = sim.summary
+        host_outcomes.append({"name": name, "events": s["events"],
+                              "completed": s["completed"],
+                              "rejected": s["rejected"],
+                              "sim_end_time": s["sim_end_time"]})
+    host_wall = max(time.time() - t0, 1e-9)
+    host_events = sum(o["events"] for o in host_outcomes)
+
+    # --- one batched fleet launch over the whole grid -----------------
+    runner = FleetRunner()
+    sims = [FleetRunner.build(name, _workload(n_jobs, seed), SYSTEM, code,
+                              job_factory=JobFactory(), seed=seed)
+            for name, code, _, seed in grid]
+    result_fleet = runner.run(sims)
+    fleet_wall = max(result_fleet.wall_time_s, 1e-9)
+    fleet_events = sum(int(f.n_events) for f in result_fleet.finals)
+
+    # per-sim outcome cross-check (decision-level equality is pinned by
+    # tests/test_fleet_engine.py; the bench refuses to report numbers
+    # for diverging simulations)
+    for i, want in enumerate(host_outcomes):
+        s = result_fleet.summary(i)
+        got = {"name": want["name"], "events": s["events"],
+               "completed": s["completed"], "rejected": s["rejected"],
+               "sim_end_time": s["sim_end_time"]}
+        assert got == want, f"engine divergence: {got} != {want}"
+
+    speedup = (fleet_events / fleet_wall) / (host_events / host_wall)
+    result = {
+        "benchmark": "fleet",
+        "quick": quick,
+        "grid": {"schedulers": [t for t, _, _ in GRID],
+                 "seeds": n_seeds, "base_seed": BASE_SEED},
+        "n_sims": len(grid),
+        "jobs_per_sim": n_jobs,
+        "host": {
+            "wall_time_s": round(host_wall, 3),
+            "events": host_events,
+            "events_per_s": round(host_events / host_wall, 1),
+            "sims_per_s": round(len(grid) / host_wall, 2),
+        },
+        "fleet": {
+            "wall_time_s": round(fleet_wall, 3),
+            "compile_time_s": round(result_fleet.compile_time_s, 3),
+            "events": fleet_events,
+            "events_per_s": round(fleet_events / fleet_wall, 1),
+            "sims_per_s": round(len(grid) / fleet_wall, 2),
+            "n_devices": result_fleet.n_devices,
+        },
+        "speedup_aggregate_events_per_s": round(speedup, 2),
+        "env": bench_metadata(),
+    }
+    emit(f"fleet/host/{len(grid)}sims",
+         1e6 * host_wall / max(host_events, 1),
+         f"events_per_s={result['host']['events_per_s']}")
+    emit(f"fleet/batched/{len(grid)}sims",
+         1e6 * fleet_wall / max(fleet_events, 1),
+         f"events_per_s={result['fleet']['events_per_s']},"
+         f"compile_s={result['fleet']['compile_time_s']}")
+    emit("fleet/speedup_vs_serial_host", speedup,
+         f"n_sims={len(grid)}")
+
+    path = os.path.join(REPO_ROOT, "BENCH_fleet.json")
+    with open(path, "w") as fh:
+        json.dump(result, fh, indent=1)
+    return result

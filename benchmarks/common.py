@@ -1,7 +1,9 @@
-"""Shared benchmark utilities: Seth-like system, synthetic workloads."""
+"""Shared benchmark utilities: Seth-like system, synthetic workloads,
+and the environment stamp every BENCH_*.json carries."""
 from __future__ import annotations
 
 import os
+import platform
 import random
 from typing import Dict, Iterator, List
 
@@ -46,3 +48,23 @@ def seth_jobs(n: int, seed: int = 0) -> Iterator[Job]:
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     """CSV contract of benchmarks/run.py: name,us_per_call,derived."""
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def bench_metadata() -> Dict[str, object]:
+    """Environment stamp written as ``result["env"]`` into every
+    BENCH_*.json — perf numbers are meaningless without the jax
+    version/backend/device they were measured on."""
+    meta: Dict[str, object] = {
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "bench_scale": SCALE,
+    }
+    try:
+        import jax
+        meta["jax"] = jax.__version__
+        meta["backend"] = jax.default_backend()
+        meta["device_count"] = jax.device_count()
+        meta["device_kind"] = jax.devices()[0].device_kind
+    except Exception as e:  # pragma: no cover - jax is baked into the image
+        meta["jax"] = f"unavailable: {e}"
+    return meta

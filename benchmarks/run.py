@@ -20,7 +20,7 @@ import time
 import traceback
 
 MODULES = ["table1", "table2", "fig_generator", "kernels", "dispatch",
-           "core", "roofline"]
+           "core", "roofline", "fleet"]
 
 
 def main() -> None:
@@ -33,7 +33,18 @@ def main() -> None:
     ap.add_argument("--core", action="store_true",
                     help="simulation-core sweep (10k/100k/1M synthetic "
                          "jobs) -> BENCH_core.json")
+    ap.add_argument("--fleet", action="store_true",
+                    help="batched fleet grid vs serial host baseline "
+                         "-> BENCH_fleet.json (with --quick: CI smoke)")
     args = ap.parse_args()
+    if args.fleet:
+        from . import bench_fleet
+        print("name,us_per_call,derived")
+        result = bench_fleet.run(args.out, quick=args.quick)
+        print(f"# fleet {result['n_sims']} sims: "
+              f"{result['speedup_aggregate_events_per_s']}x aggregate "
+              f"events/s vs serial host", file=sys.stderr)
+        return
     if args.core:
         from . import bench_core
         print("name,us_per_call,derived")

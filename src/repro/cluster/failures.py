@@ -4,7 +4,10 @@
 an exponential failure model (MTBF per host) — fed to the core
 ``NodeFailureModel`` additional-data hook, which re-queues victim jobs
 (checkpoint/restart semantics: the re-queued job's remaining duration is
-reduced to the last checkpoint boundary).
+reduced to the last checkpoint boundary).  The trace is precomputed as
+arrays from a seeded ``np.random.Generator`` (the repo-wide seeding
+convention), so failure scenarios can feed the compiled fleet loop
+directly via :meth:`FailureInjector.arrays`.
 
 ``FaultAwareScheduler`` wraps any scheduler and avoids placing jobs on
 nodes with recent failures (blast-radius avoidance) by masking them from
@@ -12,8 +15,7 @@ the allocator's availability view.
 """
 from __future__ import annotations
 
-import random
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Tuple
 
 import numpy as np
 
@@ -23,25 +25,65 @@ from ..core.job import Job
 
 
 class FailureInjector:
+    """Seeded per-node fail/repair trace, precomputed as arrays.
+
+    Each node alternates exponential up-times (mean ``mtbf_s``) with
+    fixed ``repair_s`` outages until ``horizon_s``.  All inter-failure
+    draws come from one vectorized ``np.random.Generator`` batch: per
+    node, enough exponential gaps are drawn up front that their running
+    sum crosses the horizon (over-drawing changes nothing — each gap is
+    an independent draw consumed left to right, so determinism only
+    depends on the seed and the per-node draw count).
+    """
+
     def __init__(self, n_nodes: int, mtbf_s: float, repair_s: float,
                  horizon_s: int, seed: int = 0) -> None:
-        self.events: List[Tuple[int, int, str]] = []
-        rng = random.Random(seed)
+        rng = np.random.default_rng(seed)
+        times: List[int] = []
+        nodes: List[int] = []
+        fails: List[bool] = []
+        # worst-case draws per node: horizon of back-to-back minimal
+        # cycles is unbounded for exponential draws, so draw in chunks
+        chunk = max(int(horizon_s / max(mtbf_s, 1e-9)) * 2 + 8, 16)
         for node in range(n_nodes):
             t = 0.0
+            gaps = rng.exponential(mtbf_s, size=chunk)
+            g = 0
             while True:
-                t += rng.expovariate(1.0 / mtbf_s)
+                if g == gaps.shape[0]:
+                    gaps = rng.exponential(mtbf_s, size=chunk)
+                    g = 0
+                t += gaps[g]
+                g += 1
                 if t >= horizon_s:
                     break
-                self.events.append((int(t), node, "fail"))
+                times.append(int(t))
+                nodes.append(node)
+                fails.append(True)
                 t += repair_s
                 if t >= horizon_s:
                     break
-                self.events.append((int(t), node, "repair"))
-        self.events.sort()
+                times.append(int(t))
+                nodes.append(node)
+                fails.append(False)
+        order = np.lexsort((np.asarray(nodes, dtype=np.int64),
+                            np.asarray(times, dtype=np.int64)))
+        self.times = np.asarray(times, dtype=np.int64)[order]
+        self.nodes = np.asarray(nodes, dtype=np.int64)[order]
+        self.is_fail = np.asarray(fails, dtype=bool)[order]
+
+    def arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """``(times int64[E], nodes int64[E], is_fail bool[E])`` sorted by
+        (time, node) — the compiled-loop-ready representation."""
+        return self.times, self.nodes, self.is_fail
+
+    @property
+    def events(self) -> List[Tuple[int, int, str]]:
+        return [(int(t), int(n), "fail" if f else "repair")
+                for t, n, f in zip(self.times, self.nodes, self.is_fail)]
 
     def trace(self) -> List[Tuple[int, int, str]]:
-        return list(self.events)
+        return self.events
 
 
 class CheckpointRestartPolicy:

@@ -48,6 +48,17 @@ from .monitors import SystemStatus, UtilizationMonitor
 from .resources import ResourceManager
 
 
+def default_job_factory(rm: ResourceManager) -> JobFactory:
+    """The Simulator's default factory: SWF totals -> node-spanning
+    request, sized by the densest node group of the system (shared with
+    the fleet batch planner so both engines parse records identically)."""
+    cores = int(max(rm.capacity[:, rm.rt_index["core"]])) \
+        if "core" in rm.rt_index else 1
+    mem_i = rm.rt_index.get("mem")
+    mem = int(max(rm.capacity[:, mem_i])) if mem_i is not None else 0
+    return JobFactory(swf_resource_mapper(cores, mem))
+
+
 class Simulator:
     def __init__(
         self,
@@ -72,13 +83,7 @@ class Simulator:
         self.output_dir = output_dir
         self.name = name or self.dispatcher.name
         if job_factory is None:
-            # default: SWF totals -> node-spanning request, sized by the
-            # densest node group of this system
-            cores = int(max(self.rm.capacity[:, self.rm.rt_index["core"]]))\
-                if "core" in self.rm.rt_index else 1
-            mem_i = self.rm.rt_index.get("mem")
-            mem = int(max(self.rm.capacity[:, mem_i])) if mem_i is not None else 0
-            job_factory = JobFactory(swf_resource_mapper(cores, mem))
+            job_factory = default_job_factory(self.rm)
         self.job_factory = job_factory
 
     # ------------------------------------------------------------------

@@ -3,28 +3,48 @@
     exp = Experiment('my_experiment', workload, sys_cfg)
     exp.gen_dispatchers([FirstInFirstOut, ShortestJobFirst], [FirstFit])
     exp.run_simulation()      # simulates every dispatcher + all plots
+
+Batch planner (DESIGN.md §8): instead of a repeat-loop of host
+simulations, ``run_simulation`` now *plans* the dispatcher×repeat grid.
+Grid points whose scheduler lowers onto the compiled fleet engine
+(FIFO/SJF/LJF × FirstFit, see ``repro.fleet.engine.compiles``) run as
+ONE batched ``FleetRunner`` launch — every repeat of every compilable
+dispatcher advances in a single vmapped device call — and their
+summaries/outputs re-enter the existing results/plots pipeline
+unchanged.  Everything else (EASY-backfilling, Best-Fit, data-driven
+schedulers, runs with custom ``start_kwargs``) falls back to the host
+engine per-dispatcher, exactly as before.
+
+Repeat seeding: a ``SyntheticWorkload`` repeat ``rep`` runs on
+``base_seed + rep`` (``SyntheticWorkload.reseed``), so repeats draw
+independent arrival/duration streams; the seed is recorded in each
+repeat's summary.  Non-seeded workloads replay identically and record
+no seed.
 """
 from __future__ import annotations
 
 import copy
 import json
 import os
-from typing import Dict, List, Optional, Sequence, Type
+from typing import Dict, List, Optional, Sequence, Tuple, Type
 
 from ..core.dispatchers.base import AllocatorBase, SchedulerBase
-from ..core.simulator import Simulator
+from ..core.resources import ResourceManager
+from ..core.simulator import Simulator, default_job_factory
+from ..workloads.synthetic import SyntheticWorkload
 from .plot_factory import (DECISION_PLOTS, PERFORMANCE_PLOTS, PlotFactory)
 
 
 class Experiment:
     def __init__(self, name: str, workload, sys_config,
                  output_dir: str = "results", repeats: int = 1,
-                 **sim_kwargs) -> None:
+                 use_fleet: bool = True, **sim_kwargs) -> None:
         self.name = name
         self.workload = workload
         self.sys_config = sys_config
         self.output_dir = os.path.join(output_dir, name)
         self.repeats = max(1, repeats)
+        self.use_fleet = use_fleet
         self.sim_kwargs = sim_kwargs
         self.dispatchers: List[SchedulerBase] = []
         self.results: Dict[str, Dict] = {}
@@ -41,34 +61,111 @@ class Experiment:
         self.dispatchers.append(scheduler)
 
     # ------------------------------------------------------------------
+    # batch planning
+    # ------------------------------------------------------------------
+    def _repeat_workload(self, rep: int) -> Tuple[object, Optional[int]]:
+        """Workload + recorded seed for repeat ``rep``."""
+        wl = self.workload
+        if isinstance(wl, SyntheticWorkload):
+            seed = wl.seed + rep
+            return wl.reseed(seed), seed
+        return wl, None
+
+    def _fleet_eligible(self, sched: SchedulerBase,
+                        start_kwargs: Dict) -> bool:
+        """Whether this grid row can lower onto the compiled engine:
+        compilable scheduler, a materializable workload, and no host-only
+        knobs (custom start kwargs, unknown sim kwargs)."""
+        if not self.use_fleet or start_kwargs:
+            return False
+        if not isinstance(self.workload, (SyntheticWorkload, list, tuple)):
+            return False
+        if set(self.sim_kwargs) - {"job_factory", "lookahead_jobs"}:
+            return False
+        from ..fleet.engine import compiles
+        return compiles(sched)
+
+    def _rep_name(self, name: str, rep: int) -> str:
+        return f"{name}-r{rep}" if self.repeats > 1 else name
+
+    def _run_fleet(self, scheds: List[SchedulerBase]) -> Dict[str, Dict]:
+        """Lower ``scheds`` × repeats onto ONE FleetRunner launch."""
+        from ..fleet.engine import sched_code
+        from ..fleet.runner import FleetRunner
+
+        factory = self.sim_kwargs.get("job_factory")
+        if factory is None:
+            factory = default_job_factory(ResourceManager(self.sys_config))
+
+        runner = FleetRunner()
+        sims, keys = [], []
+        for sched in scheds:
+            name = sched.dispatcher_name
+            code = sched_code(sched)
+            for rep in range(self.repeats):
+                workload, seed = self._repeat_workload(rep)
+                sims.append(FleetRunner.build(
+                    self._rep_name(name, rep), workload, self.sys_config,
+                    code, job_factory=factory, seed=seed))
+                keys.append((name, rep))
+        result = runner.run(sims)
+
+        out: Dict[str, Dict] = {}
+        for i, (name, rep) in enumerate(keys):
+            out_path, bench_path = result.write_outputs(self.output_dir, i)
+            entry = out.setdefault(name, {"summaries": []})
+            entry["summaries"].append(result.summary(i))
+            entry["output"] = out_path       # last repeat wins (host parity)
+            entry["bench"] = bench_path
+        return out
+
+    def _run_host(self, sched: SchedulerBase, start_kwargs: Dict) -> Dict:
+        """The per-dispatcher host repeat loop (non-compilable grid rows)."""
+        name = sched.dispatcher_name
+        summaries = []
+        out_path = None
+        for rep in range(self.repeats):
+            # each repeat runs a FRESH scheduler: data-driven dispatchers
+            # (observe_completion) must not leak learned state between
+            # repeats, or repeat statistics are biased toward the later
+            # (better-informed) runs
+            rep_sched = copy.deepcopy(sched)
+            rep_sched.reset()
+            workload, seed = self._repeat_workload(rep)
+            sim = Simulator(workload, self.sys_config, rep_sched,
+                            output_dir=self.output_dir,
+                            name=self._rep_name(name, rep),
+                            **self.sim_kwargs)
+            out_path = sim.start_simulation(**start_kwargs)
+            summary = dict(sim.summary)
+            summary["engine"] = "host"
+            if seed is not None:
+                summary["seed"] = seed
+            summaries.append(summary)
+        return {
+            "summaries": summaries,
+            "output": out_path,
+            "bench": out_path.replace("-output.jsonl", "-bench.jsonl"),
+        }
+
+    # ------------------------------------------------------------------
     def run_simulation(self, produce_plots: bool = True,
                        start_kwargs: Optional[Dict] = None) -> Dict[str, Dict]:
         os.makedirs(self.output_dir, exist_ok=True)
         start_kwargs = start_kwargs or {}
+
+        fleet_rows = [s for s in self.dispatchers
+                      if self._fleet_eligible(s, start_kwargs)]
+        fleet_results = self._run_fleet(fleet_rows) if fleet_rows else {}
+
         outputs, benches, labels = [], [], []
-        for sched in self.dispatchers:
+        for sched in self.dispatchers:       # results keep dispatcher order
             name = sched.dispatcher_name
-            summaries = []
-            out_path = None
-            for rep in range(self.repeats):
-                # each repeat runs a FRESH scheduler: data-driven
-                # dispatchers (observe_completion) must not leak learned
-                # state between repeats, or repeat statistics are biased
-                # toward the later (better-informed) runs
-                rep_sched = copy.deepcopy(sched)
-                rep_sched.reset()
-                sim = Simulator(self.workload, self.sys_config, rep_sched,
-                                output_dir=self.output_dir,
-                                name=f"{name}-r{rep}" if self.repeats > 1 else name,
-                                **self.sim_kwargs)
-                out_path = sim.start_simulation(**start_kwargs)
-                summaries.append(sim.summary)
-            self.results[name] = {
-                "summaries": summaries,
-                "output": out_path,
-                "bench": out_path.replace("-output.jsonl", "-bench.jsonl"),
-            }
-            outputs.append(out_path)
+            if name in fleet_results:
+                self.results[name] = fleet_results[name]
+            else:
+                self.results[name] = self._run_host(sched, start_kwargs)
+            outputs.append(self.results[name]["output"])
             benches.append(self.results[name]["bench"])
             labels.append(name)
 

@@ -1,0 +1,287 @@
+"""Compiled steady-state advance: the whole event loop as ONE jitted
+``lax.while_loop`` over :class:`~repro.fleet.state.SimState` (DESIGN.md §8).
+
+The host simulator pays a host↔device round trip per event; this engine
+runs *thousands of events per host interaction*: next-event time,
+completion release, submission batch, and a blocking greedy dispatch all
+execute as masked array ops inside one while loop, so a fleet of
+simulations `vmap`s along a leading sim axis with zero host involvement.
+
+Covered dispatchers (``sched_code``): FIFO / SJF / LJF × FirstFit — the
+paper's blocking policies.  Their host implementations sort queue indices
+by ``(est, queued_time)`` (stable over FIFO arrival order) and stop at
+the first allocation failure; the compiled twin replicates this with a
+three-level lexicographic masked argmin ``(k1, k2, k3)`` re-evaluated per
+start (keys are static within a dispatch round, so the recomputed argmin
+walks exactly the host's priority prefix):
+
+    FIFO  (fifo_rank, 0,           0)
+    SJF   (est,       queued_time, fifo_rank)
+    LJF   (-est,      queued_time, fifo_rank)
+
+FirstFit picks the first ``n_need`` fitting nodes by node id via a
+cumsum-and-scatter (no dynamic-size ``nonzero``): ``sel = fit & (cumsum
+<= need)`` marks them, ``slot = cumsum - 1`` scatters node ids into a
+``[K+1]`` buffer whose last ("trash") entry absorbs the unselected
+writes.
+
+The fused score+commit step optionally *reuses the
+``alloc_score_batch`` Pallas kernel* (``use_kernel=True``): one
+``[M, N]`` fit/score launch per dispatch round — the ``BatchProbe``
+pattern — with the per-start availability recheck ANDed on top (the
+recheck is the binding constraint once in-round starts dirty nodes, so
+the traces stay bit-identical).
+
+Everything is int32 (no x64 on the accelerator path); ``INF_I = 2**30``
+is the masked-minimum sentinel.  Termination: every iteration either
+advances the submission pointer or retires >= 1 completion, so the loop
+runs at most ``2M + 8`` steps (also the event-log length and the
+runaway guard).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels.alloc_score import alloc_score_batch_pallas
+from .state import (COMPLETED, INF_I, QUEUED, REJECTED, RUNNING, SimState)
+
+SCHED_FIFO, SCHED_SJF, SCHED_LJF = 0, 1, 2
+SCHED_NAMES = {SCHED_FIFO: "FIFO", SCHED_SJF: "SJF", SCHED_LJF: "LJF"}
+
+
+# ----------------------------------------------------------------------
+# compilability contract
+# ----------------------------------------------------------------------
+def sched_code(scheduler) -> Optional[int]:
+    """Engine policy code for ``scheduler``, or None if it cannot be
+    lowered onto the compiled loop.
+
+    Compilable = exactly one of the blocking policies (subclasses may
+    override ``plan`` arbitrarily, so only the exact types qualify) with
+    exactly a ``FirstFit`` allocator and no ``observe_completion`` hook
+    (data-driven schedulers need the host callback stream).
+    """
+    from ..core.dispatchers.allocators import FirstFit
+    from ..core.dispatchers.schedulers import (FirstInFirstOut,
+                                               LongestJobFirst,
+                                               ShortestJobFirst)
+
+    codes = {FirstInFirstOut: SCHED_FIFO, ShortestJobFirst: SCHED_SJF,
+             LongestJobFirst: SCHED_LJF}
+    code = codes.get(type(scheduler))
+    if code is None:
+        return None
+    if type(getattr(scheduler, "allocator", None)) is not FirstFit:
+        return None
+    if getattr(scheduler, "observe_completion", None) is not None:
+        return None
+    return code
+
+
+def compiles(scheduler) -> bool:
+    """Whether ``scheduler`` can run on the compiled fleet engine."""
+    return sched_code(scheduler) is not None
+
+
+# ----------------------------------------------------------------------
+# the compiled loop
+# ----------------------------------------------------------------------
+def _priority_keys(s: SimState):
+    """Per-row lexicographic priority keys for the active policy."""
+    zeros = jnp.zeros_like(s.fifo_rank)
+    return lax.switch(
+        jnp.clip(s.sched_id, 0, 2),
+        [lambda: (s.fifo_rank, zeros, zeros),
+         lambda: (s.est, s.queued_time, s.fifo_rank),
+         lambda: (-s.est, s.queued_time, s.fifo_rank)])
+
+
+def _dispatch_round(s: SimState, state, start, end, assigned, avail, t,
+                    fit_round):
+    """Blocking greedy dispatch at event time ``t`` (inner while loop).
+
+    Each iteration selects the highest-priority queued job, probes
+    FirstFit against current availability (AND the per-round kernel
+    prefilter when enabled), and either commits the start or stops the
+    round (blocking semantics).  Returns the updated job/node arrays and
+    the number of jobs started this event.
+    """
+    k1, k2, k3 = _priority_keys(s)
+    n = avail.shape[0]
+    k_cap = assigned.shape[1]
+    node_ids = jnp.arange(n, dtype=jnp.int32)
+
+    def cond(c):
+        return c[-1]
+
+    def body(c):
+        state, start, end, assigned, avail, n_started, started_evt, _ = c
+        queued = state == QUEUED
+        # three-level masked lexicographic argmin
+        a = jnp.where(queued, k1, INF_I)
+        m = queued & (a == a.min())
+        b = jnp.where(m, k2, INF_I)
+        m = m & (b == b.min())
+        cch = jnp.where(m, k3, INF_I)
+        m = m & (cch == cch.min())
+        idx = jnp.argmax(m).astype(jnp.int32)
+
+        reqv = s.req[idx]
+        fitn = (avail >= reqv[None, :]).all(axis=1)
+        if fit_round is not None:
+            # kernel prefilter: valid at round start, and availability
+            # only decreases in-round, so the live recheck above is the
+            # binding constraint — the AND is a consistency fusion.
+            fitn = fitn & (fit_round[idx] > 0)
+        csum = jnp.cumsum(fitn.astype(jnp.int32))
+        need = s.n_need[idx]
+        ok = queued.any() & (csum[-1] >= need)
+        sel = fitn & (csum <= need)             # first `need` fitting nodes
+        slots = jnp.where(sel, csum - 1, k_cap)
+        nodes = jnp.full(k_cap + 1, n, jnp.int32).at[slots].set(
+            node_ids)[:k_cap]
+
+        avail = jnp.where(
+            ok, avail - sel[:, None].astype(jnp.int32) * reqv[None, :], avail)
+        state = state.at[idx].set(jnp.where(ok, RUNNING, state[idx]))
+        start = start.at[idx].set(jnp.where(ok, t, start[idx]))
+        end = end.at[idx].set(jnp.where(ok, t + s.duration[idx], end[idx]))
+        assigned = assigned.at[idx].set(
+            jnp.where(ok, nodes, assigned[idx]))
+        oki = ok.astype(jnp.int32)
+        return (state, start, end, assigned, avail, n_started + oki,
+                started_evt + oki, ok)
+
+    init = (state, start, end, assigned, avail, s.n_started,
+            jnp.int32(0), (state == QUEUED).any())
+    out = lax.while_loop(cond, body, init)
+    return out[:7]
+
+
+def _advance_impl(s: SimState, use_kernel: bool, interpret: bool) -> SimState:
+    m = s.submit.shape[0]
+    n, r = s.avail.shape
+    k_cap = s.assigned.shape[1]
+    e = s.log_t.shape[0]
+
+    def cond(s: SimState):
+        return (s.steps < e) & ((s.ptr < s.n_pending) |
+                                (s.state == RUNNING).any())
+
+    def body(s: SimState) -> SimState:
+        # ---- next event time: min(next submission, next completion) --
+        pidx = s.pending[jnp.clip(s.ptr, 0, m - 1)]
+        t_sub = jnp.where(s.ptr < s.n_pending, s.submit[pidx], INF_I)
+        running = s.state == RUNNING
+        t_end = jnp.where(running, s.end, INF_I).min()
+        t = jnp.minimum(t_sub, t_end)
+
+        # ---- completions first (as advance_to), retired ONE at a time:
+        # a typical event completes a single job, so an O(1)-sized inner
+        # loop beats the O(M*K) every-row release scatter by a wide
+        # margin on the critical path (addition commutes, so the order
+        # of same-time releases cannot change the resulting avail).
+        def c_cond(c):
+            state, _, _ = c
+            emin = jnp.where(state == RUNNING, s.end, INF_I).min()
+            # the emin < INF_I guard matters under vmap: a finished lane
+            # still EXECUTES this body (masked afterwards) with t = INF_I,
+            # and INF_I <= INF_I would spin forever
+            return (emin <= t) & (emin < INF_I)
+
+        def c_body(c):
+            state, avail, n_completed = c
+            idx = jnp.argmin(
+                jnp.where(state == RUNNING, s.end, INF_I)).astype(jnp.int32)
+            # release req[idx] on its K assigned nodes; pad entries point
+            # at the trash row n of the padded buffer and drop out
+            rel = jnp.zeros((n + 1, r), jnp.int32).at[s.assigned[idx]].add(
+                jnp.broadcast_to(s.req[idx][None, :], (k_cap, r)))
+            return (state.at[idx].set(COMPLETED), avail + rel[:n],
+                    n_completed + 1)
+
+        state, avail, n_completed = lax.while_loop(
+            c_cond, c_body, (s.state, s.avail, s.n_completed))
+
+        # ---- submission batch: contiguous pending prefix with T_sb <= t,
+        # admitted one row per trip in (T_sb, seq) order — ranks are
+        # handed out in exactly the host's enqueue order, and unfit rows
+        # consume a rank but land REJECTED with no queued_time.
+        def s_cond(c):
+            _, _, _, ptr = c[:4]
+            row = s.pending[jnp.clip(ptr, 0, m - 1)]
+            return (ptr < s.n_pending) & (s.submit[row] <= t)
+
+        def s_body(c):
+            state, queued_time, fifo_rank, ptr, rank_ctr, n_sub, n_rej = c
+            row = s.pending[jnp.clip(ptr, 0, m - 1)]
+            unfit = s.unfit[row] > 0
+            state = state.at[row].set(
+                jnp.where(unfit, REJECTED, QUEUED).astype(jnp.int32))
+            queued_time = queued_time.at[row].set(
+                jnp.where(unfit, queued_time[row], t))
+            fifo_rank = fifo_rank.at[row].set(rank_ctr)
+            return (state, queued_time, fifo_rank, ptr + 1, rank_ctr + 1,
+                    n_sub + 1, n_rej + unfit.astype(jnp.int32))
+
+        (state, queued_time, fifo_rank, ptr, rank_ctr, n_submitted,
+         n_rejected) = lax.while_loop(
+            s_cond, s_body,
+            (state, s.queued_time, s.fifo_rank, s.ptr, s.rank_ctr,
+             s.n_submitted, s.n_rejected))
+
+        s1 = s._replace(state=state, queued_time=queued_time,
+                        fifo_rank=fifo_rank)
+
+        # ---- dispatch (blocking greedy; one kernel launch per round) --
+        any_queued = (state == QUEUED).any()
+        if use_kernel:
+            fit_round, _ = alloc_score_batch_pallas(
+                avail, s.capacity, s1.req, interpret=interpret)
+        else:
+            fit_round = None
+        (state, start, end, assigned, avail, n_started,
+         started_evt) = _dispatch_round(
+            s1, state, s1.start, s1.end, s1.assigned, avail, t, fit_round)
+        n_rounds = s.n_rounds + any_queued.astype(jnp.int32)
+
+        # ---- per-event log (host bench-line schema) -------------------
+        i = jnp.clip(s.n_events, 0, e - 1)
+        log_t = s.log_t.at[i].set(t)
+        log_queue = s.log_queue.at[i].set(
+            (state == QUEUED).sum(dtype=jnp.int32))
+        log_running = s.log_running.at[i].set(
+            (state == RUNNING).sum(dtype=jnp.int32))
+        log_started = s.log_started.at[i].set(started_evt)
+
+        return s._replace(
+            state=state, queued_time=queued_time, start=start, end=end,
+            fifo_rank=fifo_rank, assigned=assigned, avail=avail,
+            ptr=ptr, now=t, rank_ctr=rank_ctr,
+            n_submitted=n_submitted, n_completed=n_completed,
+            n_rejected=n_rejected, n_started=n_started,
+            n_events=s.n_events + 1, n_rounds=n_rounds,
+            steps=s.steps + 1,
+            log_t=log_t, log_queue=log_queue, log_running=log_running,
+            log_started=log_started)
+
+    return lax.while_loop(cond, body, s)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def advance(state: SimState, use_kernel: bool = False,
+            interpret: bool = True) -> SimState:
+    """Run one simulation to completion on device; returns the final
+    state (all jobs COMPLETED/REJECTED, full event log)."""
+    return _advance_impl(state, use_kernel, interpret)
+
+
+def advance_fn(use_kernel: bool = False, interpret: bool = True):
+    """Unjitted single-sim advance closure — the unit ``FleetRunner``
+    wraps in ``vmap``/``shard_map`` before jitting."""
+    return lambda s: _advance_impl(s, use_kernel, interpret)

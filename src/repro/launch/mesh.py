@@ -32,6 +32,19 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2,
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def fleet_mesh(n_sims: Optional[int] = None) -> Mesh:
+    """1-D mesh over local devices for fleet sharding (axis ``"sims"``).
+
+    The fleet runner shards the leading sim axis of a stacked
+    :class:`~repro.fleet.state.SimState` across devices with
+    ``shard_map`` — each device advances its slice of the grid
+    independently (no cross-sim collectives).  ``n_sims`` limits the
+    mesh to the first ``n_sims`` devices (must divide the batch).
+    """
+    n = n_sims or len(jax.devices())
+    return jax.make_mesh((n,), ("sims",))
+
+
 # v5e-like hardware constants (roofline denominators; see EXPERIMENTS.md)
 PEAK_FLOPS_BF16 = 197e12          # per chip
 HBM_BW = 819e9                    # bytes/s per chip

@@ -21,6 +21,7 @@ single instance can seed several simulations of the same scenario.
 """
 from __future__ import annotations
 
+import copy
 import random
 from math import log
 from typing import Dict, Iterator, Optional, Sequence, Tuple
@@ -98,6 +99,15 @@ class SyntheticWorkload(Reader):
         self.n_users = max(1, int(n_users))
         self.start = int(start)
         self.max_duration_s = int(max_duration_s)
+
+    def reseed(self, seed: int) -> "SyntheticWorkload":
+        """Same scenario, different RNG seed: a shallow copy whose stream
+        re-derives from ``seed``.  ``Experiment`` uses this to give every
+        repeat an independent arrival/duration draw
+        (``base_seed + rep``)."""
+        clone = copy.copy(self)
+        clone.seed = int(seed)
+        return clone
 
     @staticmethod
     def _cumulative(weights: Sequence[float]) -> Sequence[float]:

@@ -97,6 +97,36 @@ def test_failure_injector_deterministic():
     assert len(a.trace()) > 0
 
 
+def test_failure_injector_arrays():
+    """The precomputed array trace is the source of truth: sorted by
+    (time, node), fail/repair alternating per node with repair_s gaps,
+    consistent with the tuple view, and seed-sensitive."""
+    inj = FailureInjector(6, mtbf_s=4000, repair_s=600, horizon_s=40000,
+                          seed=9)
+    times, nodes, is_fail = inj.arrays()
+    assert times.dtype == np.int64 and nodes.dtype == np.int64
+    assert is_fail.dtype == bool
+    assert times.shape == nodes.shape == is_fail.shape
+    order = np.lexsort((nodes, times))
+    assert np.array_equal(order, np.arange(len(times)))
+    assert inj.trace() == [
+        (int(t), int(n), "fail" if f else "repair")
+        for t, n, f in zip(times, nodes, is_fail)]
+    for node in range(6):
+        sel = nodes == node
+        t_n, f_n = times[sel], is_fail[sel]
+        # per node: strictly alternating, starting with a failure, and
+        # every repair lands exactly repair_s after its failure
+        assert f_n[0]
+        assert (f_n[:-1] != f_n[1:]).all()
+        rep = np.flatnonzero(~f_n)
+        assert (t_n[rep] - t_n[rep - 1] == 600).all()
+    assert (times < 40000).all() and times.min() >= 0
+    other = FailureInjector(6, mtbf_s=4000, repair_s=600, horizon_s=40000,
+                            seed=10)
+    assert inj.trace() != other.trace()
+
+
 def test_elastic_scaler_shrinks_under_pressure():
     profiles = make_profiles()
     factory = TPUJobFactory(profiles)

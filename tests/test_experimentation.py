@@ -1,5 +1,6 @@
 """Experimentation tools: Experiment automation, PlotFactory, metrics,
 and the HLO cost analyzer's known-cost validation."""
+import json
 import os
 import random
 
@@ -9,6 +10,7 @@ from repro.core import Job
 from repro.core.dispatchers import (BestFit, FirstFit, FirstInFirstOut,
                                     ShortestJobFirst)
 from repro.experimentation import Experiment, PlotFactory, metrics
+from repro.workloads.synthetic import SyntheticWorkload
 
 SYS = {"groups": {"compute": {"core": 4, "mem": 1024}}, "nodes": {"compute": 8}}
 
@@ -52,6 +54,52 @@ def test_metrics_pipeline(tmp_path):
     assert pts and all(c > 0 for _, _, c in pts)
     pct = metrics.percentiles(sl)
     assert pct["p50"] <= pct["p95"] <= pct["max"]
+
+
+def test_batch_planner_partitions_fleet_vs_host(tmp_path):
+    """Compilable grid rows lower onto the fleet engine, the rest run on
+    the host — tagged per summary — and the per-repeat seeds are
+    ``base_seed + rep`` for synthetic workloads."""
+    wl = SyntheticWorkload(60, seed=40, mean_interarrival_s=30.0,
+                           duration_median_s=400.0,
+                           resources={"core": (1, 4), "mem": (64, 512)})
+    exp = Experiment("mix", wl, SYS, output_dir=str(tmp_path), repeats=2)
+    exp.gen_dispatchers([FirstInFirstOut, ShortestJobFirst],
+                        [FirstFit, BestFit])
+    res = exp.run_simulation(produce_plots=False)
+    assert set(res) == {"FIFO-FF", "FIFO-BF", "SJF-FF", "SJF-BF"}
+    for name, entry in res.items():
+        engines = {s["engine"] for s in entry["summaries"]}
+        want = "fleet" if name.endswith("-FF") else "host"
+        assert engines == {want}, (name, engines)
+        assert [s["seed"] for s in entry["summaries"]] == [40, 41]
+        assert os.path.exists(entry["output"])
+        assert os.path.exists(entry["bench"])
+    # reseeded repeats draw independent streams -> different end times
+    ends = [s["sim_end_time"] for s in res["FIFO-FF"]["summaries"]]
+    assert ends[0] != ends[1]
+    with open(os.path.join(str(tmp_path), "mix", "summaries.json")) as fh:
+        assert set(json.load(fh)) == set(res)
+
+
+def test_batch_planner_fleet_and_host_agree(tmp_path):
+    """Same grid row through both engines -> identical simulation
+    outcome (counters + end time), so the planner's engine choice is
+    invisible to experiment results."""
+    wl = SyntheticWorkload(60, seed=40, mean_interarrival_s=30.0,
+                           duration_median_s=400.0,
+                           resources={"core": (1, 4), "mem": (64, 512)})
+    out = {}
+    for flag in (True, False):
+        exp = Experiment(f"uf{flag}", wl, SYS, output_dir=str(tmp_path),
+                         use_fleet=flag)
+        exp.gen_dispatchers([ShortestJobFirst], [FirstFit])
+        out[flag] = exp.run_simulation(produce_plots=False)[
+            "SJF-FF"]["summaries"][0]
+    assert out[True]["engine"] == "fleet"
+    assert out[False]["engine"] == "host"
+    for key in ("submitted", "completed", "rejected", "sim_end_time"):
+        assert out[True][key] == out[False][key], key
 
 
 def test_plot_factory_group_validation(tmp_path):

@@ -1,0 +1,198 @@
+"""SimState / HostSnapshot round-trip contracts (DESIGN.md §8).
+
+Property-style over seeded synthetic workloads: a host engine paused at
+an arbitrary event point must (a) export/import through ``HostSnapshot``
+with every internal structure intact — free list *order*, row generation
+stamps, queue-ring tombstones, both event heaps — and replay the exact
+remaining event stream, and (b) export to a compiled-loop ``SimState``
+whose counters/queue/pending window mirror the live manager.
+"""
+import numpy as np
+import pytest
+
+from repro.core.dispatchers import FirstFit, FirstInFirstOut
+from repro.core.dispatchers.base import Dispatcher
+from repro.core.dispatchers.context import DispatchContext
+from repro.core.events import EventManager
+from repro.core.job import JobFactory
+from repro.core.jobtable import JobTable
+from repro.core.resources import ResourceManager
+from repro.core.simulator import Simulator
+from repro.fleet import HostSnapshot, SimState
+from repro.fleet.state import QUEUED, RUNNING
+from repro.workloads.synthetic import SyntheticWorkload
+
+SYS = {"groups": {"a": {"core": 4, "mem": 1024}, "b": {"core": 8, "mem": 2048}},
+       "nodes": {"a": 3, "b": 2}}
+
+
+def _workload(seed, n=120):
+    return SyntheticWorkload(
+        n, seed=seed, mean_interarrival_s=20.0, duration_median_s=700.0,
+        duration_sigma=1.1, node_weights={1: 0.5, 2: 0.3, 4: 0.2},
+        resources={"core": (1, 4), "mem": (64, 1024)})
+
+
+def _paused_sim(seed, n_events, tmp_path):
+    """A host simulation stopped mid-stream at ``n_events`` (with the
+    whole workload materialized, so the source is exhausted)."""
+    sim = Simulator(_workload(seed), SYS, FirstInFirstOut(FirstFit()),
+                    job_factory=JobFactory(), lookahead_jobs=10_000,
+                    output_dir=str(tmp_path), name=f"pause{seed}")
+    sim.start_simulation(max_events=n_events, write_output=False)
+    return sim.event_manager
+
+
+def _drive(em):
+    """Minimal FIFO-FF host loop to completion; returns the dispatch
+    trace [(t, job_id, nodes...)] plus livelock-reject count."""
+    dispatcher = Dispatcher(FirstInFirstOut(FirstFit()))
+    trace = []
+    while em.has_events():
+        t = em.next_event_time()
+        if t is None:
+            for row in em.queue_rows():
+                em.reject_row(int(row))
+            break
+        _, submitted = em.advance_to(t)
+        if len(submitted):
+            for row in em.rm.unfit_rows(em.table, submitted):
+                em.reject_row(int(row))
+        if em.n_queued:
+            ctx = DispatchContext.from_event_manager(t, em)
+            plan = dispatcher.plan(ctx)
+            for job, nodes in plan.starts:
+                trace.append((t, job.id, tuple(int(x) for x in nodes)))
+                em.start_job(job, nodes)
+            for job in plan.rejects:
+                em.reject_job(job)
+    return trace
+
+
+# ----------------------------------------------------------------------
+# HostSnapshot
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,cut", [(3, 25), (11, 60), (29, 95)])
+def test_snapshot_roundtrip_preserves_internals(seed, cut, tmp_path):
+    em = _paused_sim(seed, cut, tmp_path)
+    snap = HostSnapshot.take(em)
+    em2 = snap.restore()
+
+    t1, t2 = em.table, em2.table
+    # free list ORDER (row recycling must replay identically)
+    assert t1._free == t2._free
+    # generation stamps (stale-handle detection)
+    assert np.array_equal(t1.gen[:t1._cap], t2.gen[:t2._cap])
+    assert t1._next == t2._next and t1.n_recycled == t2.n_recycled
+    # queue ring incl. tombstones and head/tail cursors
+    assert np.array_equal(em._qbuf, em2._qbuf)
+    assert np.array_equal(em._qlive, em2._qlive)
+    assert (em._qhead, em._qtail) == (em2._qhead, em2._qtail)
+    assert em._qpos == em2._qpos
+    assert np.array_equal(em.queue_rows(), em2.queue_rows())
+    # both heaps with sequence numbers (tie-break order)
+    assert sorted(em.loaded) == sorted(em2.loaded)
+    assert sorted(em._completions) == sorted(em2._completions)
+    assert em._seq == em2._seq
+    # resources + clock + counters
+    assert np.array_equal(em.rm.available, em2.rm.available)
+    assert em.current_time == em2.current_time
+    assert (em.n_submitted, em.n_completed, em.n_rejected) == \
+        (em2.n_submitted, em2.n_completed, em2.n_rejected)
+
+
+@pytest.mark.parametrize("seed,cut", [(3, 25), (11, 60), (29, 95)])
+def test_snapshot_roundtrip_replays_identically(seed, cut, tmp_path):
+    em = _paused_sim(seed, cut, tmp_path)
+    em2 = HostSnapshot.take(em).restore()
+    trace1 = _drive(em)
+    trace2 = _drive(em2)
+    assert trace1 == trace2
+    assert em.current_time == em2.current_time
+    assert (em.n_completed, em.n_rejected) == (em2.n_completed, em2.n_rejected)
+    assert not em.has_events() and not em2.has_events()
+
+
+def test_snapshot_covers_recycled_rows(tmp_path):
+    """By a late cut point some jobs completed -> rows were freed; the
+    snapshot must carry a non-trivial free list to be a real test."""
+    em = _paused_sim(3, 95, tmp_path)
+    assert em.table._free, "cut point too early: no recycled rows"
+    assert em.n_completed > 0
+    em2 = HostSnapshot.take(em).restore()
+    assert em2.table._free == em.table._free
+
+
+# ----------------------------------------------------------------------
+# SimState export
+# ----------------------------------------------------------------------
+
+def test_from_workload_pending_window_sorted():
+    state, meta = SimState.from_workload(_workload(7, 60), SYS,
+                                         job_factory=JobFactory())
+    n_pend = int(state.n_pending)
+    assert n_pend == meta.n_jobs == 60
+    rows = np.asarray(state.pending)[:n_pend]
+    subs = np.asarray(state.submit)[rows]
+    # (T_sb, seq) pop order: times non-decreasing, ties by load sequence
+    assert (np.diff(subs) >= 0).all()
+    ties = np.flatnonzero(np.diff(subs) == 0)
+    assert (rows[ties + 1] > rows[ties]).all()
+    assert int(state.ptr) == 0 and int(state.now) == 0
+    # estimates are clamped to >= 1 for the masked-argmin keys
+    assert (np.asarray(state.est)[rows] >= 1).all()
+
+
+def test_from_event_manager_requires_exhausted_source():
+    rm = ResourceManager(SYS)
+    table = JobTable(rm.resource_types)
+    fac = JobFactory()
+    rows = [fac.fill_row(table, rec) for rec in _workload(7, 30)]
+    em = EventManager(iter(rows), rm, table=table, lookahead_jobs=8)
+    with pytest.raises(ValueError, match="not exhausted"):
+        SimState.from_event_manager(em)
+
+
+@pytest.mark.parametrize("seed,cut", [(3, 40), (11, 70)])
+def test_from_event_manager_midsim_mirrors_live_state(seed, cut, tmp_path):
+    em = _paused_sim(seed, cut, tmp_path)
+    state, meta = SimState.from_event_manager(em)
+    assert int(state.now) == em.current_time
+    assert int(state.n_submitted) == em.n_submitted
+    assert int(state.n_completed) == em.n_completed
+    assert int(state.n_rejected) == em.n_rejected
+    st = np.asarray(state.state)
+    assert int((st == QUEUED).sum()) == em.n_queued
+    assert int((st == RUNNING).sum()) == em.n_running
+    # queued rows keep their enqueue order through fifo_rank
+    qrows = em.queue_rows().astype(int)
+    ranks = np.asarray(state.fifo_rank)[qrows]
+    assert (np.diff(ranks) > 0).all()
+    # every running row has a concrete completion time and assignment
+    run_rows = np.flatnonzero(st == RUNNING)
+    assert (np.asarray(state.end)[run_rows] > int(state.now)).all()
+    n = state.n_nodes
+    for r in run_rows:
+        k = int(np.asarray(state.n_need)[r])
+        assert (np.asarray(state.assigned)[r, :k] < n).all()
+
+
+def test_pad_to_grows_and_refuses_shrink():
+    state, _ = SimState.from_workload(_workload(7, 30), SYS,
+                                      job_factory=JobFactory())
+    m, k = state.n_rows, state.assigned.shape[1]
+    big = state.pad_to(m + 13, k + 2)
+    assert big.n_rows == m + 13 and big.assigned.shape[1] == k + 2
+    for name in ("submit", "state", "fifo_rank", "pending"):
+        assert np.array_equal(np.asarray(getattr(big, name))[:m],
+                              np.asarray(getattr(state, name)))
+    assert np.array_equal(np.asarray(big.assigned)[:m, :k],
+                          np.asarray(state.assigned))
+    # pad rows are inert: INF submit, COMPLETED state, trash node ids
+    from repro.fleet.state import COMPLETED, INF_I
+    assert (np.asarray(big.submit)[m:] == INF_I).all()
+    assert (np.asarray(big.state)[m:] == COMPLETED).all()
+    assert (np.asarray(big.assigned)[m:] == state.n_nodes).all()
+    with pytest.raises(ValueError):
+        big.pad_to(m, k)

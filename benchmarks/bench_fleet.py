@@ -4,17 +4,23 @@ The claim under test (DESIGN.md §8): once the event loop is compiled and
 vmapped, simulating a GRID costs barely more than simulating one member,
 so aggregate events/s scales with grid width while the serial host
 engine pays full price per grid point.  Both engines run the identical
-grid (every scheduler × every seed, same workloads, same system) and
+grid (every dispatcher × every seed, same workloads, same system) and
 the bench cross-checks their per-sim outcomes before reporting:
 
 * ``host``  — one ``Simulator`` run per grid point, back to back;
 * ``fleet`` — ONE ``FleetRunner.run`` over the stacked grid (compile
-  time reported separately: it is paid once per grid *shape*, not per
-  grid point, and jax's persistent cache amortizes it across runs).
+  time reported separately: it is paid once per padded grid *shape* —
+  the runner's bucketed compile cache — not per grid point).
 
-Writes ``BENCH_fleet.json`` at the repo root (full grid: 3 schedulers ×
-12 seeds = 36 sims; ``--quick``: 3 × 2 on a shorter workload — the CI
-smoke).
+The grid is the paper's full Table-2 policy set: {FIFO, SJF, LJF, EBF} ×
+{FirstFit, BestFit} — all eight rows compile (``fleet_covered_fraction``
+reports the compiled share and the bench refuses silent host fallback).
+Per-row events/s compare each dispatcher's host and amortized-fleet
+throughput individually, on top of the aggregate.
+
+Writes ``BENCH_fleet.json`` at the repo root (full grid: 8 dispatchers ×
+5 seeds = 40 sims; ``--quick``: FIFO-FF + EBF-BF × 2 seeds on a shorter
+workload — the CI smoke).
 
     PYTHONPATH=src python -m benchmarks.run --fleet           # full grid
     PYTHONPATH=src python -m benchmarks.run --fleet --quick   # CI smoke
@@ -26,11 +32,12 @@ import os
 import time
 from typing import Dict, List
 
-from repro.core.dispatchers import (FirstFit, FirstInFirstOut,
-                                    LongestJobFirst, ShortestJobFirst)
+from repro.core.dispatchers import (BestFit, EasyBackfilling, FirstFit,
+                                    FirstInFirstOut, LongestJobFirst,
+                                    ShortestJobFirst)
 from repro.core.job import JobFactory
 from repro.core.simulator import Simulator
-from repro.fleet import SCHED_FIFO, SCHED_LJF, SCHED_SJF, FleetRunner
+from repro.fleet import FleetRunner, dispatch_code
 from repro.workloads.synthetic import SyntheticWorkload
 
 from .common import bench_metadata, emit
@@ -41,12 +48,17 @@ SYSTEM = {"groups": {"a": {"core": 4, "mem": 1024},
                      "b": {"core": 8, "mem": 2048}},
           "nodes": {"a": 6, "b": 4}}
 
-GRID = [("FIFO-FF", SCHED_FIFO, lambda: FirstInFirstOut(FirstFit())),
-        ("SJF-FF", SCHED_SJF, lambda: ShortestJobFirst(FirstFit())),
-        ("LJF-FF", SCHED_LJF, lambda: LongestJobFirst(FirstFit()))]
+# the paper's Table-2 policy grid: scheduler x allocator, all compiled
+GRID = [(f"{s_name}-{a_name}", s_cls, a_cls)
+        for s_name, s_cls in (("FIFO", FirstInFirstOut),
+                              ("SJF", ShortestJobFirst),
+                              ("LJF", LongestJobFirst),
+                              ("EBF", EasyBackfilling))
+        for a_name, a_cls in (("FF", FirstFit), ("BF", BestFit))]
+GRID_QUICK = [GRID[0], GRID[7]]          # FIFO-FF + EBF-BF (CI smoke)
 
 BASE_SEED = 29
-N_SEEDS_FULL = 12          # 3 x 12 = 36 sims (the >=32-sim grid)
+N_SEEDS_FULL = 5           # 8 x 5 = 40 sims (the >=32-sim grid)
 N_SEEDS_QUICK = 2
 JOBS_FULL = 400
 JOBS_QUICK = 120
@@ -64,17 +76,27 @@ def run(out_dir: str, quick: bool = False) -> Dict:
     os.makedirs(out_dir, exist_ok=True)
     n_seeds = N_SEEDS_QUICK if quick else N_SEEDS_FULL
     n_jobs = JOBS_QUICK if quick else JOBS_FULL
-    grid = [(f"{tag}-s{BASE_SEED + i}", code, mk, BASE_SEED + i)
-            for tag, code, mk in GRID for i in range(n_seeds)]
+    rows = GRID_QUICK if quick else GRID
+    codes = {tag: dispatch_code(s_cls(a_cls()))
+             for tag, s_cls, a_cls in rows}
+    # the whole Table-2 grid must lower onto the compiled engine — a
+    # silent host fallback would corrupt the fleet numbers
+    fallbacks = [tag for tag, pair in codes.items() if pair is None]
+    assert not fallbacks, f"host fallback rows: {fallbacks}"
+    grid = [(f"{tag}-s{BASE_SEED + i}", tag, s_cls, a_cls, BASE_SEED + i)
+            for tag, s_cls, a_cls in rows for i in range(n_seeds)]
 
     # --- serial host baseline: one Simulator per grid point -----------
     host_outcomes: List[Dict] = []
+    host_row_wall: Dict[str, float] = {tag: 0.0 for tag, _, _ in rows}
     t0 = time.time()
-    for name, _, mk, seed in grid:
-        sim = Simulator(_workload(n_jobs, seed), SYSTEM, mk(),
+    for name, tag, s_cls, a_cls, seed in grid:
+        t_row = time.time()
+        sim = Simulator(_workload(n_jobs, seed), SYSTEM, s_cls(a_cls()),
                         job_factory=JobFactory(), output_dir=out_dir,
                         name=f"fleetbench-{name}")
         sim.start_simulation(write_output=False)
+        host_row_wall[tag] += time.time() - t_row
         s = sim.summary
         host_outcomes.append({"name": name, "events": s["events"],
                               "completed": s["completed"],
@@ -85,9 +107,10 @@ def run(out_dir: str, quick: bool = False) -> Dict:
 
     # --- one batched fleet launch over the whole grid -----------------
     runner = FleetRunner()
-    sims = [FleetRunner.build(name, _workload(n_jobs, seed), SYSTEM, code,
+    sims = [FleetRunner.build(name, _workload(n_jobs, seed), SYSTEM,
+                              codes[tag][0], alloc_id=codes[tag][1],
                               job_factory=JobFactory(), seed=seed)
-            for name, code, _, seed in grid]
+            for name, tag, _, _, seed in grid]
     result_fleet = runner.run(sims)
     fleet_wall = max(result_fleet.wall_time_s, 1e-9)
     fleet_events = sum(int(f.n_events) for f in result_fleet.finals)
@@ -95,21 +118,40 @@ def run(out_dir: str, quick: bool = False) -> Dict:
     # per-sim outcome cross-check (decision-level equality is pinned by
     # tests/test_fleet_engine.py; the bench refuses to report numbers
     # for diverging simulations)
+    row_events: Dict[str, int] = {tag: 0 for tag, _, _ in rows}
     for i, want in enumerate(host_outcomes):
         s = result_fleet.summary(i)
         got = {"name": want["name"], "events": s["events"],
                "completed": s["completed"], "rejected": s["rejected"],
                "sim_end_time": s["sim_end_time"]}
         assert got == want, f"engine divergence: {got} != {want}"
+        row_events[grid[i][1]] += s["events"]
+
+    # per-row throughput: host walls are measured per row; the single
+    # batched fleet launch is amortized uniformly over its sims
+    per_row = []
+    for tag, _, _ in rows:
+        h_wall = max(host_row_wall[tag], 1e-9)
+        f_wall = max(fleet_wall * n_seeds / len(grid), 1e-9)
+        per_row.append({
+            "dispatcher": tag,
+            "engine": "fleet",
+            "events": row_events[tag],
+            "host_events_per_s": round(row_events[tag] / h_wall, 1),
+            "fleet_events_per_s": round(row_events[tag] / f_wall, 1),
+        })
 
     speedup = (fleet_events / fleet_wall) / (host_events / host_wall)
     result = {
         "benchmark": "fleet",
         "quick": quick,
-        "grid": {"schedulers": [t for t, _, _ in GRID],
+        "grid": {"dispatchers": [t for t, _, _ in rows],
                  "seeds": n_seeds, "base_seed": BASE_SEED},
         "n_sims": len(grid),
         "jobs_per_sim": n_jobs,
+        "fleet_covered_fraction": round(
+            (len(rows) - len(fallbacks)) / len(rows), 3),
+        "rows": per_row,
         "host": {
             "wall_time_s": round(host_wall, 3),
             "events": host_events,
@@ -119,6 +161,10 @@ def run(out_dir: str, quick: bool = False) -> Dict:
         "fleet": {
             "wall_time_s": round(fleet_wall, 3),
             "compile_time_s": round(result_fleet.compile_time_s, 3),
+            "compile_cache_hit": result_fleet.cache_hit,
+            # cost-class launch split (EBF lanes vs blocking lanes — the
+            # vmap convoy-tax fix); per-launch walls show where time goes
+            "launches": result_fleet.launches,
             "events": fleet_events,
             "events_per_s": round(fleet_events / fleet_wall, 1),
             "sims_per_s": round(len(grid) / fleet_wall, 2),
@@ -135,7 +181,7 @@ def run(out_dir: str, quick: bool = False) -> Dict:
          f"events_per_s={result['fleet']['events_per_s']},"
          f"compile_s={result['fleet']['compile_time_s']}")
     emit("fleet/speedup_vs_serial_host", speedup,
-         f"n_sims={len(grid)}")
+         f"n_sims={len(grid)},covered={result['fleet_covered_fraction']}")
 
     path = os.path.join(REPO_ROOT, "BENCH_fleet.json")
     with open(path, "w") as fh:

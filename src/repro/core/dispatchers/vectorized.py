@@ -160,25 +160,7 @@ class VectorizedEasyBackfilling(EasyBackfilling):
 
     @staticmethod
     def _shadow(avail, head_vec, n_nodes, releases):
-        if not releases:
-            return None, None
-        # group release events by distinct estimated time -> deltas[M, N, R]
-        times = []
-        deltas = []
-        cur_t = None
-        for t, idx, vec in releases:
-            if t != cur_t:
-                times.append(t)
-                deltas.append(np.zeros_like(avail))
-                cur_t = t
-            deltas[-1][idx] += vec[None, :]
-        deltas = np.stack(deltas).astype(np.int32)          # [M, N, R]
-        fits = np.asarray(ops.ebf_shadow_fits(
-            np.ascontiguousarray(avail, dtype=np.int32), deltas,
-            np.ascontiguousarray(head_vec, dtype=np.int32)))
-        hit = np.nonzero(fits >= n_nodes)[0]
-        if hit.shape[0] == 0:
-            return None, None
-        m = int(hit[0])
-        shadow_avail = avail + deltas[: m + 1].sum(axis=0)
-        return times[m], shadow_avail
+        # the grouping + prefix-scan driver is shared with the compiled
+        # fleet engine's shadow walk (kernels/ebf_shadow.py)
+        from ...kernels.ebf_shadow import shadow_from_releases
+        return shadow_from_releases(avail, head_vec, n_nodes, releases)

@@ -7,13 +7,17 @@
 Batch planner (DESIGN.md §8): instead of a repeat-loop of host
 simulations, ``run_simulation`` now *plans* the dispatcher×repeat grid.
 Grid points whose scheduler lowers onto the compiled fleet engine
-(FIFO/SJF/LJF × FirstFit, see ``repro.fleet.engine.compiles``) run as
-ONE batched ``FleetRunner`` launch — every repeat of every compilable
-dispatcher advances in a single vmapped device call — and their
-summaries/outputs re-enter the existing results/plots pipeline
-unchanged.  Everything else (EASY-backfilling, Best-Fit, data-driven
-schedulers, runs with custom ``start_kwargs``) falls back to the host
-engine per-dispatcher, exactly as before.
+(FIFO/SJF/LJF/EBF × FirstFit/BestFit, see
+``repro.fleet.engine.dispatch_code``) run as ONE batched ``FleetRunner``
+launch — every repeat of every compilable dispatcher advances in a
+single vmapped device call — and their summaries/outputs re-enter the
+existing results/plots pipeline unchanged.  Everything else
+(data-driven schedulers, runs with custom ``start_kwargs``) falls back
+to the host engine per-dispatcher.  Fallbacks are never silent: every
+summary row carries ``engine`` ("fleet"/"host") and
+``fallback_reason`` (None on the fleet path; on the host path, WHY the
+row could not compile — e.g. ``"non-compilable-dispatcher"`` or
+``"custom-start-kwargs"``).
 
 Repeat seeding: a ``SyntheticWorkload`` repeat ``rep`` runs on
 ``base_seed + rep`` (``SyntheticWorkload.reseed``), so repeats draw
@@ -71,26 +75,32 @@ class Experiment:
             return wl.reseed(seed), seed
         return wl, None
 
-    def _fleet_eligible(self, sched: SchedulerBase,
-                        start_kwargs: Dict) -> bool:
-        """Whether this grid row can lower onto the compiled engine:
-        compilable scheduler, a materializable workload, and no host-only
-        knobs (custom start kwargs, unknown sim kwargs)."""
-        if not self.use_fleet or start_kwargs:
-            return False
+    def _fallback_reason(self, sched: SchedulerBase,
+                         start_kwargs: Dict) -> Optional[str]:
+        """``None`` when this grid row lowers onto the compiled engine;
+        otherwise the reason it must run on the host (compilable
+        scheduler, a materializable workload, and no host-only knobs —
+        custom start kwargs, unknown sim kwargs — are all required)."""
+        if not self.use_fleet:
+            return "fleet-disabled"
+        if start_kwargs:
+            return "custom-start-kwargs"
         if not isinstance(self.workload, (SyntheticWorkload, list, tuple)):
-            return False
-        if set(self.sim_kwargs) - {"job_factory", "lookahead_jobs"}:
-            return False
+            return "host-only-workload"
+        extra = set(self.sim_kwargs) - {"job_factory", "lookahead_jobs"}
+        if extra:
+            return "host-only-sim-kwargs:" + ",".join(sorted(extra))
         from ..fleet.engine import compiles
-        return compiles(sched)
+        if not compiles(sched):
+            return "non-compilable-dispatcher"
+        return None
 
     def _rep_name(self, name: str, rep: int) -> str:
         return f"{name}-r{rep}" if self.repeats > 1 else name
 
     def _run_fleet(self, scheds: List[SchedulerBase]) -> Dict[str, Dict]:
         """Lower ``scheds`` × repeats onto ONE FleetRunner launch."""
-        from ..fleet.engine import sched_code
+        from ..fleet.engine import dispatch_code
         from ..fleet.runner import FleetRunner
 
         factory = self.sim_kwargs.get("job_factory")
@@ -101,12 +111,13 @@ class Experiment:
         sims, keys = [], []
         for sched in scheds:
             name = sched.dispatcher_name
-            code = sched_code(sched)
+            s_code, a_code = dispatch_code(sched)
             for rep in range(self.repeats):
                 workload, seed = self._repeat_workload(rep)
                 sims.append(FleetRunner.build(
                     self._rep_name(name, rep), workload, self.sys_config,
-                    code, job_factory=factory, seed=seed))
+                    s_code, alloc_id=a_code, job_factory=factory,
+                    seed=seed))
                 keys.append((name, rep))
         result = runner.run(sims)
 
@@ -114,12 +125,15 @@ class Experiment:
         for i, (name, rep) in enumerate(keys):
             out_path, bench_path = result.write_outputs(self.output_dir, i)
             entry = out.setdefault(name, {"summaries": []})
-            entry["summaries"].append(result.summary(i))
+            summary = result.summary(i)
+            summary["fallback_reason"] = None
+            entry["summaries"].append(summary)
             entry["output"] = out_path       # last repeat wins (host parity)
             entry["bench"] = bench_path
         return out
 
-    def _run_host(self, sched: SchedulerBase, start_kwargs: Dict) -> Dict:
+    def _run_host(self, sched: SchedulerBase, start_kwargs: Dict,
+                  fallback_reason: Optional[str] = None) -> Dict:
         """The per-dispatcher host repeat loop (non-compilable grid rows)."""
         name = sched.dispatcher_name
         summaries = []
@@ -139,6 +153,7 @@ class Experiment:
             out_path = sim.start_simulation(**start_kwargs)
             summary = dict(sim.summary)
             summary["engine"] = "host"
+            summary["fallback_reason"] = fallback_reason
             if seed is not None:
                 summary["seed"] = seed
             summaries.append(summary)
@@ -154,8 +169,10 @@ class Experiment:
         os.makedirs(self.output_dir, exist_ok=True)
         start_kwargs = start_kwargs or {}
 
+        reasons = {s.dispatcher_name: self._fallback_reason(s, start_kwargs)
+                   for s in self.dispatchers}
         fleet_rows = [s for s in self.dispatchers
-                      if self._fleet_eligible(s, start_kwargs)]
+                      if reasons[s.dispatcher_name] is None]
         fleet_results = self._run_fleet(fleet_rows) if fleet_rows else {}
 
         outputs, benches, labels = [], [], []
@@ -164,7 +181,8 @@ class Experiment:
             if name in fleet_results:
                 self.results[name] = fleet_results[name]
             else:
-                self.results[name] = self._run_host(sched, start_kwargs)
+                self.results[name] = self._run_host(
+                    sched, start_kwargs, fallback_reason=reasons[name])
             outputs.append(self.results[name]["output"])
             benches.append(self.results[name]["bench"])
             labels.append(name)

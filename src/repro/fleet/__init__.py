@@ -2,19 +2,22 @@
 
 Runs whole dispatcher×seed grids in one device launch: a fixed-capacity
 :class:`SimState` pytree snapshotted from the host core, a jitted
-``lax.while_loop`` advance covering FIFO/SJF/LJF × FirstFit, and a
-:class:`FleetRunner` that vmaps a leading sim axis and shards it across
-devices.  ``HostSnapshot`` is the lossless host-side export/import
-companion (the host-fallback contract).
+``lax.while_loop`` advance covering FIFO/SJF/LJF/EBF × FirstFit/BestFit,
+and a :class:`FleetRunner` that vmaps a leading sim axis and shards it
+across devices.  ``HostSnapshot`` is the lossless host-side
+export/import companion (the host-fallback contract).
 """
-from .engine import (SCHED_FIFO, SCHED_LJF, SCHED_NAMES, SCHED_SJF, advance,
-                     advance_fn, compiles, sched_code)
+from .engine import (ALLOC_BF, ALLOC_FF, ALLOC_NAMES, SCHED_EBF, SCHED_FIFO,
+                     SCHED_LJF, SCHED_NAMES, SCHED_SJF, advance, advance_fn,
+                     alloc_code, compiles, dispatch_code, sched_code)
 from .runner import FleetResult, FleetRunner, FleetSim
 from .state import HostSnapshot, SimMeta, SimState
 
 __all__ = [
-    "SCHED_FIFO", "SCHED_SJF", "SCHED_LJF", "SCHED_NAMES",
-    "advance", "advance_fn", "compiles", "sched_code",
+    "SCHED_FIFO", "SCHED_SJF", "SCHED_LJF", "SCHED_EBF", "SCHED_NAMES",
+    "ALLOC_FF", "ALLOC_BF", "ALLOC_NAMES",
+    "advance", "advance_fn", "compiles", "sched_code", "alloc_code",
+    "dispatch_code",
     "FleetResult", "FleetRunner", "FleetSim",
     "HostSnapshot", "SimMeta", "SimState",
 ]

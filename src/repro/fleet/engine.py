@@ -3,14 +3,16 @@
 
 The host simulator pays a host↔device round trip per event; this engine
 runs *thousands of events per host interaction*: next-event time,
-completion release, submission batch, and a blocking greedy dispatch all
+completion release, submission batch, and a full dispatch round all
 execute as masked array ops inside one while loop, so a fleet of
 simulations `vmap`s along a leading sim axis with zero host involvement.
 
-Covered dispatchers (``sched_code``): FIFO / SJF / LJF × FirstFit — the
-paper's blocking policies.  Their host implementations sort queue indices
-by ``(est, queued_time)`` (stable over FIFO arrival order) and stop at
-the first allocation failure; the compiled twin replicates this with a
+Covered dispatchers: {FIFO, SJF, LJF, EBF} (``sched_code``) × {FirstFit,
+BestFit} (``alloc_code``) — the paper's full Table-2 policy set.
+
+**Scheduling.**  The blocking policies sort queue indices by
+``(est, queued_time)`` (stable over FIFO arrival order) and stop at the
+first allocation failure; the compiled twin replicates this with a
 three-level lexicographic masked argmin ``(k1, k2, k3)`` re-evaluated per
 start (keys are static within a dispatch round, so the recomputed argmin
 walks exactly the host's priority prefix):
@@ -18,149 +20,361 @@ walks exactly the host's priority prefix):
     FIFO  (fifo_rank, 0,           0)
     SJF   (est,       queued_time, fifo_rank)
     LJF   (-est,      queued_time, fifo_rank)
+    EBF   (fifo_rank, 0,           0)        # FIFO priority
 
-FirstFit picks the first ``n_need`` fitting nodes by node id via a
-cumsum-and-scatter (no dynamic-size ``nonzero``): ``sel = fit & (cumsum
-<= need)`` marks them, ``slot = cumsum - 1`` scatters node ids into a
-``[K+1]`` buffer whose last ("trash") entry absorbs the unselected
-writes.
+**EASY-backfilling** extends the round with a ``(shadow_time, extra)``
+carry: when the greedy phase hits its first blocked job (the *head*),
+the shadow walk (``kernels.ebf_shadow.shadow_walk`` — one estimated
+release per trip, tie-grouped exactly like the host scan) finds the
+earliest instant the head fits, the allocator reserves the head's nodes
+at that instant, and the round switches to a backfill phase: remaining
+queued jobs (FIFO order, tracked by a rank cursor) start iff they fit
+*now* and either finish (by estimate) before the shadow time or fit
+inside ``min(avail, extra)`` — the resources left over after the head's
+reservation.  Skips don't end the backfill phase; the cursor strictly
+advances, bounding the round.
 
-The fused score+commit step optionally *reuses the
-``alloc_score_batch`` Pallas kernel* (``use_kernel=True``): one
-``[M, N]`` fit/score launch per dispatch round — the ``BatchProbe``
-pattern — with the per-start availability recheck ANDed on top (the
-recheck is the binding constraint once in-round starts dirty nodes, so
-the traces stay bit-identical).
+**Allocation.**  FirstFit picks the first ``n_need`` fitting nodes by
+node id via a cumsum-and-scatter (no dynamic-size ``nonzero``): ``sel =
+fit & (cumsum <= need)`` marks them, ``slot = cumsum - 1`` scatters node
+ids into a ``[K+1]`` buffer whose last ("trash") entry absorbs the
+unselected writes.  BestFit runs the same cumsum-scatter over the nodes
+*re-ordered busiest-first*: a per-node leftover-capacity score
+``load = Σ_r (cap - avail)/cap`` (float32 — the exact arithmetic of the
+``alloc_score`` kernels, pinned trace-equal to the host's float64) and a
+stable ``argsort(-load)`` (ties by node id, as ``np.argsort(...,
+kind="stable")``), so each admitted job lands on its tightest-fitting
+nodes and the assignment list order matches the host's busiest-first
+output.
+
+The fused score+commit step optionally *reuses the ``alloc_score_batch``
+Pallas kernel* (``use_kernel=True``): one ``[M, N]`` fit/score launch per
+dispatch round — the ``BatchProbe`` pattern — with the per-start
+availability recheck ANDed on top.  Every probe pool (greedy avail,
+backfill ``min(avail, extra)``) is ≤ the round-start availability, so
+the live recheck is the binding constraint and traces stay bit-identical;
+the one probe that can EXCEED round-start availability — the head's
+reservation at shadow time — deliberately skips the prefilter.
 
 Everything is int32 (no x64 on the accelerator path); ``INF_I = 2**30``
-is the masked-minimum sentinel.  Termination: every iteration either
-advances the submission pointer or retires >= 1 completion, so the loop
-runs at most ``2M + 8`` steps (also the event-log length and the
-runaway guard).
+is the masked-minimum sentinel.  Termination: every outer iteration
+either advances the submission pointer or retires >= 1 completion, so
+the loop runs at most ``2M + 8`` steps (also the event-log length and
+the runaway guard); inside a round, every trip either starts a job or
+advances the backfill cursor past one queued rank.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 from ..kernels.alloc_score import alloc_score_batch_pallas
+from ..kernels.ebf_shadow import shadow_walk
 from .state import (COMPLETED, INF_I, QUEUED, REJECTED, RUNNING, SimState)
 
-SCHED_FIFO, SCHED_SJF, SCHED_LJF = 0, 1, 2
-SCHED_NAMES = {SCHED_FIFO: "FIFO", SCHED_SJF: "SJF", SCHED_LJF: "LJF"}
+SCHED_FIFO, SCHED_SJF, SCHED_LJF, SCHED_EBF = 0, 1, 2, 3
+SCHED_NAMES = {SCHED_FIFO: "FIFO", SCHED_SJF: "SJF", SCHED_LJF: "LJF",
+               SCHED_EBF: "EBF"}
+
+ALLOC_FF, ALLOC_BF = 0, 1
+ALLOC_NAMES = {ALLOC_FF: "FF", ALLOC_BF: "BF"}
 
 
 # ----------------------------------------------------------------------
 # compilability contract
 # ----------------------------------------------------------------------
-def sched_code(scheduler) -> Optional[int]:
-    """Engine policy code for ``scheduler``, or None if it cannot be
-    lowered onto the compiled loop.
+def dispatch_code(scheduler) -> Optional[Tuple[int, int]]:
+    """``(sched_code, alloc_code)`` for ``scheduler``, or None if it
+    cannot be lowered onto the compiled loop.
 
-    Compilable = exactly one of the blocking policies (subclasses may
+    Compilable = exactly one of FIFO/SJF/LJF/EBF (subclasses may
     override ``plan`` arbitrarily, so only the exact types qualify) with
-    exactly a ``FirstFit`` allocator and no ``observe_completion`` hook
-    (data-driven schedulers need the host callback stream).
+    exactly a ``FirstFit`` or ``BestFit`` allocator and no
+    ``observe_completion`` hook (data-driven schedulers need the host
+    callback stream).
     """
-    from ..core.dispatchers.allocators import FirstFit
-    from ..core.dispatchers.schedulers import (FirstInFirstOut,
+    from ..core.dispatchers.allocators import BestFit, FirstFit
+    from ..core.dispatchers.schedulers import (EasyBackfilling,
+                                               FirstInFirstOut,
                                                LongestJobFirst,
                                                ShortestJobFirst)
 
-    codes = {FirstInFirstOut: SCHED_FIFO, ShortestJobFirst: SCHED_SJF,
-             LongestJobFirst: SCHED_LJF}
-    code = codes.get(type(scheduler))
-    if code is None:
+    scodes = {FirstInFirstOut: SCHED_FIFO, ShortestJobFirst: SCHED_SJF,
+              LongestJobFirst: SCHED_LJF, EasyBackfilling: SCHED_EBF}
+    acodes = {FirstFit: ALLOC_FF, BestFit: ALLOC_BF}
+    sc = scodes.get(type(scheduler))
+    if sc is None:
         return None
-    if type(getattr(scheduler, "allocator", None)) is not FirstFit:
+    ac = acodes.get(type(getattr(scheduler, "allocator", None)))
+    if ac is None:
         return None
     if getattr(scheduler, "observe_completion", None) is not None:
         return None
-    return code
+    return sc, ac
+
+
+def sched_code(scheduler) -> Optional[int]:
+    """Engine scheduler code for a compilable ``scheduler`` (None if the
+    dispatcher — scheduler OR allocator — cannot be lowered)."""
+    pair = dispatch_code(scheduler)
+    return None if pair is None else pair[0]
+
+
+def alloc_code(scheduler) -> Optional[int]:
+    """Engine allocator code for a compilable ``scheduler`` (None if the
+    dispatcher cannot be lowered)."""
+    pair = dispatch_code(scheduler)
+    return None if pair is None else pair[1]
 
 
 def compiles(scheduler) -> bool:
     """Whether ``scheduler`` can run on the compiled fleet engine."""
-    return sched_code(scheduler) is not None
+    return dispatch_code(scheduler) is not None
 
 
 # ----------------------------------------------------------------------
 # the compiled loop
 # ----------------------------------------------------------------------
-def _priority_keys(s: SimState):
-    """Per-row lexicographic priority keys for the active policy."""
-    zeros = jnp.zeros_like(s.fifo_rank)
+def _priority_order(s: SimState):
+    """Static per-row priority positions for the active policy.
+
+    The host's lexicographic keys — ``(est, queued_time, fifo_rank)``
+    for SJF/LJF, ``fifo_rank`` for FIFO/EBF — are all *determined by
+    static inputs*: estimates never change, ranks are handed out in the
+    fixed ``pending`` order, and a row's ``queued_time`` always equals
+    its submit time (a submission is always its own event).  So the
+    whole lex order can be materialized ONCE per sim, and every
+    candidate selection in the dispatch round collapses from a
+    three-key lexicographic argmin (~6 masked ``[M]`` passes per trip)
+    to a single masked argmin over these positions — the dominant cost
+    of the hot greedy loop.
+
+    Rows already admitted (resumed snapshots) keep their recorded
+    ``fifo_rank``/``queued_time``; rows still pending get the rank the
+    admit loop will hand them (``rank_ctr + position - ptr``) and their
+    submit time.  Rows outside the pending window land on a trash slot.
+    """
+    m = s.submit.shape[0]
+    pos = jnp.arange(m, dtype=jnp.int32)
+    future = (pos >= s.ptr) & (pos < s.n_pending)
+    tgt = jnp.where(future, s.pending, m)
+    rank = jnp.zeros(m + 1, jnp.int32).at[tgt].set(
+        s.rank_ctr + pos - s.ptr)[:m]
+    rank = jnp.where(s.fifo_rank < INF_I, s.fifo_rank, rank)
+    qt = jnp.where(s.queued_time >= 0, s.queued_time, s.submit)
+
+    def lex(key):
+        order = jnp.lexsort((rank, qt, key))
+        return jnp.zeros(m, jnp.int32).at[order].set(pos)
+
     return lax.switch(
-        jnp.clip(s.sched_id, 0, 2),
-        [lambda: (s.fifo_rank, zeros, zeros),
-         lambda: (s.est, s.queued_time, s.fifo_rank),
-         lambda: (-s.est, s.queued_time, s.fifo_rank)])
+        jnp.clip(s.sched_id, 0, 3),
+        [lambda: rank,
+         lambda: lex(s.est),
+         lambda: lex(-s.est),
+         lambda: rank])                      # EBF runs FIFO priority
+
+
+def _select_nodes(alloc_id, pool, capacity, reqv, need, k_cap, pref):
+    """Allocator probe against ``pool`` availability: FirstFit (node-id
+    order) or BestFit (busiest-first stable order) via one shared
+    cumsum-and-scatter over the policy's node ordering.
+
+    Returns ``(ok, sel [N] bool, nodes [K])``; ``pref`` optionally ANDs
+    a precomputed fit prefilter (the per-round kernel launch) into the
+    live fit mask.
+    """
+    n = pool.shape[0]
+    node_ids = jnp.arange(n, dtype=jnp.int32)
+    fitn = (pool >= reqv[None, :]).all(axis=1)
+    if pref is not None:
+        fitn = fitn & pref
+    # BestFit key: fraction-in-use summed over resource types, float32 —
+    # identical arithmetic to kernels/ref.alloc_score*, whose ordering is
+    # pinned trace-equal to the host's float64 np.argsort
+    cap = jnp.maximum(capacity, 1).astype(jnp.float32)
+    load = ((capacity - pool).astype(jnp.float32) / cap).sum(axis=1)
+    order = jnp.where(alloc_id == ALLOC_BF,
+                      jnp.argsort(-load, stable=True).astype(jnp.int32),
+                      node_ids)
+    fit_o = fitn[order]
+    csum = jnp.cumsum(fit_o.astype(jnp.int32))
+    ok = csum[-1] >= need
+    sel_o = fit_o & (csum <= need)          # first `need` fitting in order
+    slots = jnp.where(sel_o, csum - 1, k_cap)
+    nodes = jnp.full(k_cap + 1, n, jnp.int32).at[slots].set(order)[:k_cap]
+    sel = jnp.zeros(n, dtype=bool).at[order].set(sel_o)
+    return ok, sel, nodes
 
 
 def _dispatch_round(s: SimState, state, start, end, assigned, avail, t,
-                    fit_round):
-    """Blocking greedy dispatch at event time ``t`` (inner while loop).
+                    fit_round, pri, q0):
+    """One full dispatch round at event time ``t``, in three phases.
 
-    Each iteration selects the highest-priority queued job, probes
-    FirstFit against current availability (AND the per-round kernel
-    prefilter when enabled), and either commits the start or stops the
-    round (blocking semantics).  Returns the updated job/node arrays and
-    the number of jobs started this event.
+    **Greedy loop** — select the highest-priority queued job, probe the
+    allocator against current availability, commit; stop on the first
+    failure (all four policies start greedily until blocked).
+
+    **Shadow + reservation** (straight-line, once per round, EBF only) —
+    the job the greedy loop blocked on is the *head*: walk the estimated
+    releases of running jobs to the first instant the head fits
+    (``shadow_walk``, shared with the host scheduler), place the head's
+    reservation there with the round's allocator, and derive the
+    ``extra`` pool the reservation leaves free.
+
+    **Backfill loop** (EBF with a feasible shadow only) — scan the queue
+    past the head in FIFO rank order; a job may start iff it fits now
+    AND (finishes by estimate before the shadow time, or fits inside
+    ``min(avail, extra)``).  Misfits are skipped in BULK: each trip
+    computes every job's fit count against its own pool (``[M, N]`` —
+    nodes are few) and jumps straight to the first rank that passes, so
+    the loop costs O(starts) trips, not O(queue) — trace-equivalent
+    because a misfit probe has no side effects on the host either.
+
+    The phase split keeps the hot greedy loop as lean as the blocking
+    policies need (the shadow machinery and bulk fit counts priced only
+    into rounds that block), which matters under vmap where every lane
+    pays for the widest lane's body.  ``pri`` is the static priority
+    order from :func:`_priority_order`; ``q0`` the number of queued
+    rows at round entry (the round never re-queues, so the count just
+    decrements per start).  Returns the updated job/node arrays and the
+    number of jobs started this event.
     """
-    k1, k2, k3 = _priority_keys(s)
-    n = avail.shape[0]
     k_cap = assigned.shape[1]
-    node_ids = jnp.arange(n, dtype=jnp.int32)
+    is_ebf = s.sched_id == SCHED_EBF
 
     def cond(c):
         return c[-1]
 
-    def body(c):
-        state, start, end, assigned, avail, n_started, started_evt, _ = c
+    # --- phase 1: greedy starts until the first blocked candidate -----
+    def g_body(c):
+        (state, start, end, assigned, avail, n_started, started_evt,
+         q_cnt, _, _) = c
         queued = state == QUEUED
-        # three-level masked lexicographic argmin
-        a = jnp.where(queued, k1, INF_I)
-        m = queued & (a == a.min())
-        b = jnp.where(m, k2, INF_I)
-        m = m & (b == b.min())
-        cch = jnp.where(m, k3, INF_I)
-        m = m & (cch == cch.min())
-        idx = jnp.argmax(m).astype(jnp.int32)
-
+        idx = jnp.argmin(jnp.where(queued, pri, INF_I)).astype(jnp.int32)
+        has_cand = q_cnt > 0
         reqv = s.req[idx]
-        fitn = (avail >= reqv[None, :]).all(axis=1)
-        if fit_round is not None:
-            # kernel prefilter: valid at round start, and availability
-            # only decreases in-round, so the live recheck above is the
-            # binding constraint — the AND is a consistency fusion.
-            fitn = fitn & (fit_round[idx] > 0)
-        csum = jnp.cumsum(fitn.astype(jnp.int32))
         need = s.n_need[idx]
-        ok = queued.any() & (csum[-1] >= need)
-        sel = fitn & (csum <= need)             # first `need` fitting nodes
-        slots = jnp.where(sel, csum - 1, k_cap)
-        nodes = jnp.full(k_cap + 1, n, jnp.int32).at[slots].set(
-            node_ids)[:k_cap]
-
-        avail = jnp.where(
-            ok, avail - sel[:, None].astype(jnp.int32) * reqv[None, :], avail)
+        pref = None if fit_round is None else fit_round[idx] > 0
+        ok_fit, sel, nodes = _select_nodes(
+            s.alloc_id, avail, s.capacity, reqv, need, k_cap, pref)
+        ok = has_cand & ok_fit
+        dec = sel[:, None].astype(jnp.int32) * reqv[None, :]
+        avail = jnp.where(ok, avail - dec, avail)
         state = state.at[idx].set(jnp.where(ok, RUNNING, state[idx]))
         start = start.at[idx].set(jnp.where(ok, t, start[idx]))
         end = end.at[idx].set(jnp.where(ok, t + s.duration[idx], end[idx]))
-        assigned = assigned.at[idx].set(
-            jnp.where(ok, nodes, assigned[idx]))
+        assigned = assigned.at[idx].set(jnp.where(ok, nodes, assigned[idx]))
         oki = ok.astype(jnp.int32)
-        return (state, start, end, assigned, avail, n_started + oki,
-                started_evt + oki, ok)
+        q_cnt = q_cnt - oki
+        go = ok & (q_cnt > 0)
+        return (state, start, end, assigned, avail,
+                n_started + oki, started_evt + oki, q_cnt, idx, go)
 
-    init = (state, start, end, assigned, avail, s.n_started,
-            jnp.int32(0), (state == QUEUED).any())
-    out = lax.while_loop(cond, body, init)
-    return out[:7]
+    (state, start, end, assigned, avail, n_started, started_evt, q_cnt,
+     idx_h, _) = lax.while_loop(
+        cond, g_body,
+        (state, start, end, assigned, avail, s.n_started, jnp.int32(0),
+         q0, jnp.int32(0), q0 > 0))
+
+    # --- phase 2: EBF shadow walk + head reservation (once) -----------
+    # The loop above exits with queued rows remaining exactly when its
+    # last probe FAILED, so the candidate it carried out is the blocked
+    # head (arbitrary when the queue drained — has_head masks that).
+    queued = state == QUEUED
+    has_head = is_ebf & (q_cnt > 0)
+    head_req = s.req[idx_h]
+    head_need = s.n_need[idx_h]
+    # estimated releases of running rows (incl. this round's starts:
+    # start == t); a job may overrun its estimate, so never before
+    # t + 1.  All-INF when no EBF head is blocked, which makes the walk
+    # a zero-trip no-op (vmap-safe).
+    rel = jnp.where((state == RUNNING) & has_head,
+                    jnp.maximum(start + s.est, t + 1), INF_I)
+    found, shadow_t, sh_avail = shadow_walk(avail, rel, assigned, s.req,
+                                            head_req, head_need)
+    # head reservation at shadow time — shadow availability can exceed
+    # the round-start availability, so NO kernel prefilter
+    _, sel_h, _ = _select_nodes(
+        s.alloc_id, sh_avail, s.capacity, head_req, head_need, k_cap, None)
+    enter_bf = has_head & found
+    extra = jnp.where(
+        enter_bf,
+        sh_avail - sel_h[:, None].astype(jnp.int32) * head_req[None, :],
+        jnp.zeros_like(avail))
+
+    # backfill pool per job: plain avail while the candidate finishes
+    # (by estimate) before the shadow time, else it must not touch the
+    # head's reservation -> min(avail, extra)
+    before_all = t + s.est <= shadow_t                           # [M]
+    cursor0 = s.fifo_rank[idx_h]
+    go0 = enter_bf & (queued & (s.fifo_rank > cursor0)).any()
+
+    # --- phase 3: backfill behind the reservation ---------------------
+    def b_body(c):
+        (state, start, end, assigned, avail, extra, n_started,
+         started_evt, cursor, _) = c
+        queued = state == QUEUED
+        # bulk misfit skip: every job's fit count against its OWN pool
+        # (avail for before-shadow candidates, min(avail, extra) past
+        # it) — the count must honor the reservation or every
+        # avail-fitting-but-reservation-blocked job burns a trip.  Full
+        # [M] width on purpose: these workloads run overloaded with
+        # queue depths in the hundreds, so any fixed row window leaks
+        # one trip per uncovered row and loses far more than the
+        # narrower tensor saves.
+        pool_b = jnp.minimum(avail, extra)
+        cnt_a = (avail[None, :, :] >= s.req[:, None, :]).all(
+            axis=2).sum(axis=1, dtype=jnp.int32)                 # [M]
+        cnt_b = (pool_b[None, :, :] >= s.req[:, None, :]).all(
+            axis=2).sum(axis=1, dtype=jnp.int32)
+        can_start = jnp.where(before_all, cnt_a, cnt_b) >= s.n_need
+        bf_cand = queued & (s.fifo_rank > cursor) & can_start
+        idx = jnp.argmin(
+            jnp.where(bf_cand, s.fifo_rank, INF_I)).astype(jnp.int32)
+        has_cand = bf_cand.any()
+
+        reqv = s.req[idx]
+        need = s.n_need[idx]
+        before_shadow = before_all[idx]
+        pool = jnp.where(before_shadow, avail, pool_b)
+        # kernel prefilter: valid because both pools are <= the
+        # round-start availability, so the live recheck is the binding
+        # constraint — the AND is a consistency fusion
+        pref = None if fit_round is None else fit_round[idx] > 0
+        ok_fit, sel, nodes = _select_nodes(
+            s.alloc_id, pool, s.capacity, reqv, need, k_cap, pref)
+        ok = has_cand & ok_fit
+
+        dec = sel[:, None].astype(jnp.int32) * reqv[None, :]
+        avail = jnp.where(ok, avail - dec, avail)
+        extra = jnp.where(ok & (~before_shadow), extra - dec, extra)
+        state = state.at[idx].set(jnp.where(ok, RUNNING, state[idx]))
+        start = start.at[idx].set(jnp.where(ok, t, start[idx]))
+        end = end.at[idx].set(jnp.where(ok, t + s.duration[idx], end[idx]))
+        assigned = assigned.at[idx].set(jnp.where(ok, nodes, assigned[idx]))
+        oki = ok.astype(jnp.int32)
+
+        cursor = jnp.where(has_cand, s.fifo_rank[idx], cursor)
+        # a candidate whose real pool rejected it commits nothing and
+        # the cursor skips past it — the has_cand gating keeps the
+        # cursor-progress guarantee; can_start (vs post-commit avail,
+        # a subset of pre-commit fits) trims the terminal no-fit trip
+        more_bf = ((state == QUEUED) & (s.fifo_rank > cursor)
+                   & can_start).any()
+        go = has_cand & more_bf
+        return (state, start, end, assigned, avail, extra,
+                n_started + oki, started_evt + oki, cursor, go)
+
+    out = lax.while_loop(
+        cond, b_body,
+        (state, start, end, assigned, avail, extra, n_started,
+         started_evt, cursor0, go0))
+    return out[:5] + out[6:8]
 
 
 def _advance_impl(s: SimState, use_kernel: bool, interpret: bool) -> SimState:
@@ -168,6 +382,9 @@ def _advance_impl(s: SimState, use_kernel: bool, interpret: bool) -> SimState:
     n, r = s.avail.shape
     k_cap = s.assigned.shape[1]
     e = s.log_t.shape[0]
+    # the policy's priority order is fully static (see _priority_order):
+    # one sort per sim replaces a lex argmin per dispatch trip
+    pri = _priority_order(s)
 
     def cond(s: SimState):
         return (s.steps < e) & ((s.ptr < s.n_pending) |
@@ -238,8 +455,12 @@ def _advance_impl(s: SimState, use_kernel: bool, interpret: bool) -> SimState:
         s1 = s._replace(state=state, queued_time=queued_time,
                         fifo_rank=fifo_rank)
 
-        # ---- dispatch (blocking greedy; one kernel launch per round) --
-        any_queued = (state == QUEUED).any()
+        # ---- dispatch (one kernel launch per round) -------------------
+        # queued count from the admit/start/complete counters (a row is
+        # QUEUED iff admitted and neither rejected nor started) — saves
+        # an [M] reduction per event
+        q0 = n_submitted - n_rejected - s.n_started
+        any_queued = q0 > 0
         if use_kernel:
             fit_round, _ = alloc_score_batch_pallas(
                 avail, s.capacity, s1.req, interpret=interpret)
@@ -247,16 +468,15 @@ def _advance_impl(s: SimState, use_kernel: bool, interpret: bool) -> SimState:
             fit_round = None
         (state, start, end, assigned, avail, n_started,
          started_evt) = _dispatch_round(
-            s1, state, s1.start, s1.end, s1.assigned, avail, t, fit_round)
+            s1, state, s1.start, s1.end, s1.assigned, avail, t, fit_round,
+            pri, q0)
         n_rounds = s.n_rounds + any_queued.astype(jnp.int32)
 
         # ---- per-event log (host bench-line schema) -------------------
         i = jnp.clip(s.n_events, 0, e - 1)
         log_t = s.log_t.at[i].set(t)
-        log_queue = s.log_queue.at[i].set(
-            (state == QUEUED).sum(dtype=jnp.int32))
-        log_running = s.log_running.at[i].set(
-            (state == RUNNING).sum(dtype=jnp.int32))
+        log_queue = s.log_queue.at[i].set(q0 - started_evt)
+        log_running = s.log_running.at[i].set(n_started - n_completed)
         log_started = s.log_started.at[i].set(started_evt)
 
         return s._replace(

@@ -89,7 +89,8 @@ class SimState(NamedTuple):
     # --- clock / counters (0-d int32) ----------------------------------
     now: np.ndarray
     rank_ctr: np.ndarray          # next fifo rank to hand out
-    sched_id: np.ndarray          # engine.SCHED_* policy code
+    sched_id: np.ndarray          # engine.SCHED_* scheduler code
+    alloc_id: np.ndarray          # engine.ALLOC_* allocator code
     n_submitted: np.ndarray
     n_completed: np.ndarray
     n_rejected: np.ndarray
@@ -159,7 +160,7 @@ class SimState(NamedTuple):
             req=np.zeros((m, r), i32), assigned=np.full((m, k), n, i32),
             avail=np.zeros((n, r), i32), capacity=np.zeros((n, r), i32),
             pending=np.zeros(m, i32), ptr=i32(0), n_pending=i32(0),
-            now=i32(0), rank_ctr=i32(0), sched_id=i32(0),
+            now=i32(0), rank_ctr=i32(0), sched_id=i32(0), alloc_id=i32(0),
             n_submitted=i32(0), n_completed=i32(0), n_rejected=i32(0),
             n_started=i32(0), n_events=i32(0), n_rounds=i32(0),
             steps=i32(0),
@@ -175,6 +176,7 @@ class SimState(NamedTuple):
         sys_config: Dict,
         job_factory: Optional[JobFactory] = None,
         sched_id: int = 0,
+        alloc_id: int = 0,
         k_nodes: Optional[int] = None,
         capacity_rows: Optional[int] = None,
     ) -> Tuple["SimState", "SimMeta"]:
@@ -207,7 +209,8 @@ class SimState(NamedTuple):
         # _exhausted (the window check is len(loaded) < lookahead)
         em = EventManager(iter(rows), rm, table=table,
                           lookahead_jobs=len(rows) + 1)
-        return cls.from_event_manager(em, sched_id=sched_id, k_nodes=k_nodes,
+        return cls.from_event_manager(em, sched_id=sched_id,
+                                      alloc_id=alloc_id, k_nodes=k_nodes,
                                       capacity_rows=capacity_rows)
 
     # ------------------------------------------------------------------
@@ -216,6 +219,7 @@ class SimState(NamedTuple):
         cls,
         em: EventManager,
         sched_id: int = 0,
+        alloc_id: int = 0,
         k_nodes: Optional[int] = None,
         capacity_rows: Optional[int] = None,
     ) -> Tuple["SimState", "SimMeta"]:
@@ -290,6 +294,7 @@ class SimState(NamedTuple):
         f["rank_ctr"] = np.int32(len(qrows))
         f["now"] = np.int32(em.current_time)
         f["sched_id"] = np.int32(sched_id)
+        f["alloc_id"] = np.int32(alloc_id)
         f["n_submitted"] = np.int32(em.n_submitted)
         f["n_completed"] = np.int32(em.n_completed)
         f["n_rejected"] = np.int32(em.n_rejected)

@@ -58,20 +58,35 @@ def test_metrics_pipeline(tmp_path):
 
 def test_batch_planner_partitions_fleet_vs_host(tmp_path):
     """Compilable grid rows lower onto the fleet engine, the rest run on
-    the host — tagged per summary — and the per-repeat seeds are
-    ``base_seed + rep`` for synthetic workloads."""
+    the host — every summary tagged with ``engine`` AND
+    ``fallback_reason`` — and the per-repeat seeds are ``base_seed +
+    rep`` for synthetic workloads."""
+
+    class TweakedFIFO(FirstInFirstOut):
+        """Subclass -> not exactly FirstInFirstOut -> host only."""
+        name = "TFIFO"
+
     wl = SyntheticWorkload(60, seed=40, mean_interarrival_s=30.0,
                            duration_median_s=400.0,
                            resources={"core": (1, 4), "mem": (64, 512)})
     exp = Experiment("mix", wl, SYS, output_dir=str(tmp_path), repeats=2)
     exp.gen_dispatchers([FirstInFirstOut, ShortestJobFirst],
                         [FirstFit, BestFit])
+    exp.add_dispatcher(TweakedFIFO(FirstFit()))
     res = exp.run_simulation(produce_plots=False)
-    assert set(res) == {"FIFO-FF", "FIFO-BF", "SJF-FF", "SJF-BF"}
+    assert set(res) == {"FIFO-FF", "FIFO-BF", "SJF-FF", "SJF-BF",
+                        "TFIFO-FF"}
     for name, entry in res.items():
         engines = {s["engine"] for s in entry["summaries"]}
-        want = "fleet" if name.endswith("-FF") else "host"
-        assert engines == {want}, (name, engines)
+        reasons = {s["fallback_reason"] for s in entry["summaries"]}
+        # the full FIFO/SJF x FF/BF product is now compilable; only the
+        # subclassed dispatcher falls back, with its reason recorded
+        if name == "TFIFO-FF":
+            assert engines == {"host"}, (name, engines)
+            assert reasons == {"non-compilable-dispatcher"}
+        else:
+            assert engines == {"fleet"}, (name, engines)
+            assert reasons == {None}
         assert [s["seed"] for s in entry["summaries"]] == [40, 41]
         assert os.path.exists(entry["output"])
         assert os.path.exists(entry["bench"])
@@ -80,6 +95,29 @@ def test_batch_planner_partitions_fleet_vs_host(tmp_path):
     assert ends[0] != ends[1]
     with open(os.path.join(str(tmp_path), "mix", "summaries.json")) as fh:
         assert set(json.load(fh)) == set(res)
+
+
+def test_fallback_reason_reports_host_only_knobs(tmp_path):
+    """Host-only run knobs are named in ``fallback_reason`` instead of
+    silently degrading the whole grid to the host engine."""
+    wl = SyntheticWorkload(40, seed=11, mean_interarrival_s=30.0,
+                           duration_median_s=300.0,
+                           resources={"core": (1, 4), "mem": (64, 512)})
+    exp = Experiment("knob", wl, SYS, output_dir=str(tmp_path),
+                     use_fleet=False)
+    exp.gen_dispatchers([FirstInFirstOut], [FirstFit])
+    res = exp.run_simulation(produce_plots=False)
+    s = res["FIFO-FF"]["summaries"][0]
+    assert s["engine"] == "host"
+    assert s["fallback_reason"] == "fleet-disabled"
+
+    exp2 = Experiment("knob2", wl, SYS, output_dir=str(tmp_path))
+    exp2.gen_dispatchers([FirstInFirstOut], [FirstFit])
+    res2 = exp2.run_simulation(produce_plots=False,
+                               start_kwargs={"max_events": 10 ** 9})
+    s2 = res2["FIFO-FF"]["summaries"][0]
+    assert s2["engine"] == "host"
+    assert s2["fallback_reason"] == "custom-start-kwargs"
 
 
 def test_batch_planner_fleet_and_host_agree(tmp_path):

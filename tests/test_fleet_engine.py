@@ -1,14 +1,17 @@
 """Compiled fleet engine equality against the host core.
 
-The decisive contract: for every compilable policy (FIFO/SJF/LJF ×
-FirstFit) the batched device engine must reproduce the host engine's
-dispatch trace BIT-IDENTICALLY — same start times, same node lists, same
-reject set — on the same golden scenario pinned by
+The decisive contract: for every compilable policy (FIFO/SJF/LJF/EBF ×
+FirstFit/BestFit) the batched device engine must reproduce the host
+engine's dispatch trace BIT-IDENTICALLY — same start times, same node
+lists, same reject set — on the same golden scenario pinned by
 ``tests/test_trace_golden.py``.  On top of that: the Pallas scoring
 kernel must not change a single decision (its prefilter is strictly
-implied by the exact availability recheck), padding must be inert, a
-mid-simulation host snapshot must continue identically on device, and
-the shard_map path must agree with the single-device path.
+implied by the exact availability recheck), padding must be inert, the
+padded-shape compile cache must reuse executables without changing
+results, a mid-simulation host snapshot must continue identically on
+device, mixed (sched, alloc) lanes in one vmapped launch must agree
+with solo launches, and the shard_map path must agree with the
+single-device path.
 """
 import json
 import os
@@ -23,9 +26,10 @@ from repro.core.dispatchers import (BestFit, EasyBackfilling, FirstFit,
                                     ShortestJobFirst)
 from repro.core.job import JobFactory
 from repro.core.simulator import Simulator
-from repro.fleet import (SCHED_FIFO, SCHED_LJF, SCHED_SJF, FleetResult,
-                         FleetRunner, FleetSim, SimState, advance, compiles,
-                         sched_code)
+from repro.fleet import (ALLOC_BF, ALLOC_FF, SCHED_EBF, SCHED_FIFO,
+                         SCHED_LJF, SCHED_SJF, FleetResult, FleetRunner,
+                         FleetSim, SimState, advance, alloc_code, compiles,
+                         dispatch_code, sched_code)
 from repro.workloads.synthetic import SyntheticWorkload
 
 GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data",
@@ -35,7 +39,11 @@ GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data",
 SYS = {"groups": {"a": {"core": 4, "mem": 1024}, "b": {"core": 8, "mem": 2048}},
        "nodes": {"a": 6, "b": 4}}
 
-TAGS = {"FIFO-FF": SCHED_FIFO, "SJF-FF": SCHED_SJF, "LJF-FF": SCHED_LJF}
+# the full compilable set: 4 schedulers x 2 allocators
+TAGS = {"FIFO-FF": (SCHED_FIFO, ALLOC_FF), "FIFO-BF": (SCHED_FIFO, ALLOC_BF),
+        "SJF-FF": (SCHED_SJF, ALLOC_FF), "SJF-BF": (SCHED_SJF, ALLOC_BF),
+        "LJF-FF": (SCHED_LJF, ALLOC_FF), "LJF-BF": (SCHED_LJF, ALLOC_BF),
+        "EBF-FF": (SCHED_EBF, ALLOC_FF), "EBF-BF": (SCHED_EBF, ALLOC_BF)}
 
 
 def _workload(n=400, seed=29):
@@ -61,13 +69,16 @@ def _host_trace(scheduler, tmp_path, n=150, seed=7):
 
 @pytest.fixture(scope="module")
 def fleet_result():
-    """ONE batched launch of all three compilable policies on the golden
-    scenario — also exercises the vmapped multi-sim path."""
+    """ONE batched launch of all eight compilable policies on the golden
+    scenario — mixed (sched, alloc) lanes in the same vmapped call
+    (``group_by_cost=False`` forces EBF and blocking lanes into the same
+    launch; the default grouped path is pinned against this one by
+    ``test_cost_grouping_is_decision_identical``)."""
     runner = FleetRunner()
-    sims = [FleetRunner.build(tag, _workload(), SYS, code,
+    sims = [FleetRunner.build(tag, _workload(), SYS, sc, alloc_id=ac,
                               job_factory=JobFactory())
-            for tag, code in sorted(TAGS.items())]
-    return runner.run(sims)
+            for tag, (sc, ac) in sorted(TAGS.items())]
+    return runner.run(sims, group_by_cost=False)
 
 
 # ----------------------------------------------------------------------
@@ -110,11 +121,15 @@ def test_fleet_outputs_feed_metrics_pipeline(fleet_result, tmp_path):
 
 
 # ----------------------------------------------------------------------
-def test_kernel_path_is_decision_identical(tmp_path):
+@pytest.mark.parametrize("sc,ac", [(SCHED_SJF, ALLOC_FF),
+                                   (SCHED_EBF, ALLOC_BF)])
+def test_kernel_path_is_decision_identical(sc, ac):
     """use_kernel=True routes scoring through the Pallas batch-probe
-    kernel; every dispatch decision must be unchanged."""
-    sims = lambda: [FleetRunner.build("k", _workload(150, 7), SYS,
-                                      SCHED_SJF, job_factory=JobFactory())]
+    kernel; every dispatch decision must be unchanged — including EBF,
+    whose head reservation deliberately bypasses the prefilter."""
+    sims = lambda: [FleetRunner.build("k", _workload(150, 7), SYS, sc,
+                                      alloc_id=ac,
+                                      job_factory=JobFactory())]
     plain = FleetRunner(use_kernel=False).run(sims())
     kernel = FleetRunner(use_kernel=True).run(sims())
     assert kernel.trace(0) == plain.trace(0)
@@ -122,12 +137,65 @@ def test_kernel_path_is_decision_identical(tmp_path):
     assert plain.summary(0)["kernel_launches"] == 0
 
 
-def test_single_sim_matches_host(tmp_path):
+@pytest.mark.parametrize("sched,sc,ac", [
+    (lambda: LongestJobFirst(FirstFit()), SCHED_LJF, ALLOC_FF),
+    (lambda: ShortestJobFirst(BestFit()), SCHED_SJF, ALLOC_BF),
+    (lambda: EasyBackfilling(FirstFit()), SCHED_EBF, ALLOC_FF),
+    (lambda: EasyBackfilling(BestFit()), SCHED_EBF, ALLOC_BF),
+])
+def test_single_sim_matches_host(sched, sc, ac, tmp_path):
     got = FleetRunner().run([FleetRunner.build(
-        "solo", _workload(150, 7), SYS, SCHED_LJF,
+        "solo", _workload(150, 7), SYS, sc, alloc_id=ac,
         job_factory=JobFactory())]).trace(0)
-    want = _host_trace(LongestJobFirst(FirstFit()), tmp_path)
+    want = _host_trace(sched(), tmp_path)
     assert got == want
+
+
+def test_mixed_lanes_match_solo_launches(fleet_result):
+    """An EBF lane (inner shadow/backfill loops) vmapped next to plain
+    blocking lanes must decide exactly as when launched alone — masked
+    lanes execute every inner loop body, so a masking bug would leak
+    between policies."""
+    tags = sorted(TAGS)
+    for tag in ("EBF-BF", "FIFO-FF"):
+        sc, ac = TAGS[tag]
+        solo = FleetRunner().run([FleetRunner.build(
+            tag, _workload(), SYS, sc, alloc_id=ac,
+            job_factory=JobFactory())])
+        assert solo.trace(0) == fleet_result.trace(tags.index(tag)), tag
+
+
+def test_cost_grouping_is_decision_identical(fleet_result):
+    """The default ``run`` splits EBF lanes into their own launch (vmap
+    lockstep makes every lane pay the EBF round's inner-loop trips —
+    grouping removes the convoy tax); every trajectory must match the
+    forced single mixed launch exactly."""
+    runner = FleetRunner()
+    sims = [FleetRunner.build(tag, _workload(), SYS, sc, alloc_id=ac,
+                              job_factory=JobFactory())
+            for tag, (sc, ac) in sorted(TAGS.items())]
+    grouped = runner.run(sims)
+    for i, tag in enumerate(sorted(TAGS)):
+        assert grouped.trace(i) == fleet_result.trace(i), tag
+        assert grouped.summary(i)["events"] == \
+            fleet_result.summary(i)["events"], tag
+
+
+def test_compile_cache_reuses_executable():
+    """Same bucketed (M, K) padded shape -> no recompile, same results;
+    a different bucket misses the cache."""
+    runner = FleetRunner()
+    build = lambda n, seed, sc, ac: FleetRunner.build(
+        f"c{n}-{seed}", _workload(n, seed), SYS, sc, alloc_id=ac,
+        job_factory=JobFactory())
+    r1 = runner.run([build(100, 3, SCHED_FIFO, ALLOC_FF)])
+    # different workload size and policy, same padding bucket
+    r2 = runner.run([build(90, 5, SCHED_EBF, ALLOC_BF)])
+    assert not r1.cache_hit and r2.cache_hit
+    assert r2.compile_time_s == 0.0
+    # results must be identical to a fresh-runner (cold) launch
+    cold = FleetRunner().run([build(90, 5, SCHED_EBF, ALLOC_BF)])
+    assert r2.trace(0) == cold.trace(0)
 
 
 def test_padding_is_inert():
@@ -171,14 +239,32 @@ def test_midsim_snapshot_continues_identically(tmp_path):
 
 
 # ----------------------------------------------------------------------
-def test_sched_code_gating():
-    assert sched_code(FirstInFirstOut(FirstFit())) == SCHED_FIFO
-    assert sched_code(ShortestJobFirst(FirstFit())) == SCHED_SJF
-    assert sched_code(LongestJobFirst(FirstFit())) == SCHED_LJF
-    assert sched_code(FirstInFirstOut(BestFit())) is None
-    assert sched_code(EasyBackfilling(FirstFit())) is None
-    assert compiles(ShortestJobFirst(FirstFit()))
-    assert not compiles(EasyBackfilling(FirstFit()))
+def test_dispatch_code_gating():
+    assert dispatch_code(FirstInFirstOut(FirstFit())) == \
+        (SCHED_FIFO, ALLOC_FF)
+    assert dispatch_code(ShortestJobFirst(FirstFit())) == \
+        (SCHED_SJF, ALLOC_FF)
+    assert dispatch_code(LongestJobFirst(BestFit())) == \
+        (SCHED_LJF, ALLOC_BF)
+    assert dispatch_code(EasyBackfilling(FirstFit())) == \
+        (SCHED_EBF, ALLOC_FF)
+    assert dispatch_code(EasyBackfilling(BestFit())) == \
+        (SCHED_EBF, ALLOC_BF)
+    assert sched_code(EasyBackfilling(BestFit())) == SCHED_EBF
+    assert alloc_code(FirstInFirstOut(BestFit())) == ALLOC_BF
+    assert compiles(EasyBackfilling(BestFit()))
+
+    # subclasses may override plan/find_nodes arbitrarily -> host only
+    class TweakedFIFO(FirstInFirstOut):
+        pass
+
+    class TweakedFF(FirstFit):
+        pass
+
+    assert dispatch_code(TweakedFIFO(FirstFit())) is None
+    assert dispatch_code(FirstInFirstOut(TweakedFF())) is None
+    assert sched_code(TweakedFIFO(FirstFit())) is None
+    assert not compiles(TweakedFIFO(FirstFit()))
 
 
 def test_shard_map_multi_device(tmp_path):
@@ -189,6 +275,7 @@ import json, sys
 from repro.core.job import JobFactory
 from repro.fleet import SCHED_FIFO, SCHED_SJF, SCHED_LJF, FleetRunner
 from repro.workloads.synthetic import SyntheticWorkload
+from repro.fleet import SCHED_EBF
 import jax
 assert jax.device_count() == 4, jax.device_count()
 SYS = json.loads(sys.argv[1])
@@ -196,10 +283,11 @@ wl = lambda s: SyntheticWorkload(
     80, seed=s, mean_interarrival_s=25.0, duration_median_s=900.0,
     duration_sigma=1.1, node_weights={1: 0.5, 2: 0.3, 4: 0.2},
     resources={"core": (1, 4), "mem": (64, 1024)})
-codes = [SCHED_FIFO, SCHED_SJF, SCHED_LJF, SCHED_FIFO, SCHED_SJF]
-sims = [FleetRunner.build(f"s{i}", wl(30 + i % 2), SYS, c,
+codes = [(SCHED_FIFO, 0), (SCHED_SJF, 1), (SCHED_LJF, 0),
+         (SCHED_EBF, 1), (SCHED_SJF, 0)]
+sims = [FleetRunner.build(f"s{i}", wl(30 + i % 2), SYS, sc, alloc_id=ac,
                           job_factory=JobFactory())
-        for i, c in enumerate(codes)]
+        for i, (sc, ac) in enumerate(codes)]
 res = FleetRunner().run(sims)
 assert res.n_devices == 4, res.n_devices
 print(json.dumps([res.trace(i) for i in range(len(sims))]))
@@ -213,8 +301,8 @@ print(json.dumps([res.trace(i) for i in range(len(sims))]))
                           timeout=600)
     assert proc.returncode == 0, proc.stderr[-2000:]
     sharded = json.loads(proc.stdout.strip().splitlines()[-1])
-    scheds = [FirstInFirstOut(FirstFit()), ShortestJobFirst(FirstFit()),
-              LongestJobFirst(FirstFit()), FirstInFirstOut(FirstFit()),
+    scheds = [FirstInFirstOut(FirstFit()), ShortestJobFirst(BestFit()),
+              LongestJobFirst(FirstFit()), EasyBackfilling(BestFit()),
               ShortestJobFirst(FirstFit())]
     for i, sched in enumerate(scheds):
         sim = Simulator(_workload(80, 30 + i % 2), SYS, sched,

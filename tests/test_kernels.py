@@ -130,6 +130,53 @@ def test_ebf_shadow_monotone():
     assert np.all(np.diff(fits) >= 0)
 
 
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 24), r=st.integers(1, 3), jobs=st.integers(0, 12),
+       seed=st.integers(0, 999))
+def test_shadow_walk_matches_host_scan(n, r, jobs, seed):
+    """The compiled one-release-per-trip walk (fleet engine's EBF carry)
+    must agree with the host prefix scan on random running-job sets —
+    same shadow time, same availability at that instant, tie-grouping
+    included (release times are drawn from a tiny range to force
+    collisions)."""
+    from repro.core.dispatchers.schedulers import EasyBackfilling
+    from repro.kernels.ebf_shadow import INF_I, shadow_walk
+
+    rng = np.random.default_rng(seed)
+    cap = rng.integers(2, 8, (n, r)).astype(np.int32)
+    avail = np.zeros((n, r), np.int32)
+    k_cap = 3
+    m = jobs + 2                                    # a couple of idle rows
+    rel = np.full(m, INF_I, np.int32)
+    assigned = np.full((m, k_cap), n, np.int32)     # trash id = n
+    req = np.zeros((m, r), np.int32)
+    releases = []
+    for j in range(jobs):
+        k = int(rng.integers(1, k_cap + 1))
+        nodes = rng.choice(n, size=k, replace=False)
+        vec = rng.integers(0, 3, r).astype(np.int32)
+        t = int(rng.integers(1, 5))                 # tight range -> ties
+        rel[j] = t
+        assigned[j, :k] = nodes
+        req[j] = vec
+        releases.append((t, nodes.astype(np.int64), vec.astype(np.int64)))
+    releases.sort(key=lambda e: e[0])
+    head_req = rng.integers(1, 4, r).astype(np.int32)
+    need = int(rng.integers(1, 3))
+
+    want_t, want_avail = EasyBackfilling._shadow(
+        avail.copy(), head_req, need, releases)
+    found, got_t, got_avail = shadow_walk(
+        jnp.asarray(avail), jnp.asarray(rel), jnp.asarray(assigned),
+        jnp.asarray(req), jnp.asarray(head_req), jnp.int32(need))
+    if want_t is None:
+        assert not bool(found)
+    else:
+        assert bool(found)
+        assert int(got_t) == want_t
+        np.testing.assert_array_equal(np.asarray(got_avail), want_avail)
+
+
 # ---------------------------------------------------------------- scan
 @pytest.mark.parametrize("bt,l,di,s,chunk,bd", [
     (1, 64, 32, 4, 32, 32),

@@ -36,7 +36,21 @@ def main() -> None:
     ap.add_argument("--fleet", action="store_true",
                     help="batched fleet grid vs serial host baseline "
                          "-> BENCH_fleet.json (with --quick: CI smoke)")
+    ap.add_argument("--failures", action="store_true",
+                    help="failure-aware simulation: host scale cell + "
+                         "host-vs-fleet crosscheck -> BENCH_failures.json "
+                         "(with --quick: CI smoke)")
     args = ap.parse_args()
+    if args.failures:
+        from . import bench_failures
+        print("name,us_per_call,derived")
+        result = bench_failures.run(args.out, quick=args.quick)
+        cell = result["scale_cell"]
+        print(f"# failures scale cell {cell['jobs']} jobs: "
+              f"{cell['events_per_s']} events/s, "
+              f"requeued={cell['failures']['requeued_jobs']}",
+              file=sys.stderr)
+        return
     if args.fleet:
         from . import bench_fleet
         print("name,us_per_call,derived")

@@ -52,7 +52,15 @@ class ElasticScaler:
 
 
 class StragglerMonitor:
-    """Detects slow hosts from observed vs expected job runtimes."""
+    """Detects slow hosts from observed vs expected job runtimes.
+
+    ``observe`` accepts row-view ``Job`` façades in any binding state:
+    a bound row, or a façade detached when its row was recycled (the
+    table snapshots final values into the façade on ``free_row``, so
+    reads never raise on staleness).  With ``expected_duration`` omitted
+    it uses the job's own walltime estimate, which makes the monitor
+    directly wireable as an ``on_complete`` callback.
+    """
 
     def __init__(self, slow_threshold: float = 1.15,
                  min_samples: int = 3) -> None:
@@ -60,13 +68,21 @@ class StragglerMonitor:
         self.slow_threshold = slow_threshold
         self.min_samples = min_samples
 
-    def observe(self, job: Job, expected_duration: int) -> None:
+    def observe(self, job: Job,
+                expected_duration: Optional[int] = None) -> None:
         if job.start_time is None or job.end_time is None:
             return
+        if job.attrs.get("restarts"):
+            # failure-requeued job: its final segment runs with a
+            # checkpoint-credited (rewritten) duration on different
+            # nodes than the lost segment — not a valid host sample
+            return
+        if expected_duration is None:
+            expected_duration = job.expected_duration
         actual = job.end_time - job.start_time
         ratio = actual / max(expected_duration, 1)
         for node in job.assigned_nodes:
-            self.host_ratio[node].append(ratio)
+            self.host_ratio[int(node)].append(ratio)
 
     def stragglers(self) -> List[int]:
         out = []
@@ -86,6 +102,9 @@ class SlowHostModel:
     def __init__(self, slow_hosts: Dict[int, float]) -> None:
         self.slow_hosts = dict(slow_hosts)
 
-    def effective_duration(self, job: Job, nodes: List[int]) -> int:
-        f = max([self.slow_hosts.get(n, 1.0) for n in nodes] + [1.0])
+    def effective_duration(self, job: Job,
+                           nodes: Optional[List[int]] = None) -> int:
+        if nodes is None:
+            nodes = job.assigned_nodes    # works bound or detached
+        f = max([self.slow_hosts.get(int(n), 1.0) for n in nodes] + [1.0])
         return max(int(job.duration * f), 1)

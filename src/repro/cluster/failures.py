@@ -131,9 +131,16 @@ class FaultAwareScheduler(SchedulerBase):
     def plan(self, ctx: DispatchContext) -> DispatchPlan:
         bad = self.quarantined(ctx.now)
         if bad:
-            # pure context rewrite: quarantined nodes look exhausted to
-            # the wrapped planner (no mutation of the resource manager)
+            # pure context rewrite: quarantined nodes look unusable to the
+            # wrapped planner (no mutation of the resource manager).  The
+            # -1 floor (not 0) kills even zero-request fits — the same
+            # value-based exclusion the core applies for its native
+            # failure schedule — and the combined node_mask keeps the EBF
+            # release walk from resurrecting these nodes at shadow time.
             masked = ctx.avail.copy()
-            masked[bad] = 0
-            ctx = ctx.replace(avail=masked)
+            masked[bad] = -1
+            mask = ctx.node_mask.copy() if ctx.node_mask is not None \
+                else np.ones(ctx.avail.shape[0], dtype=bool)
+            mask[bad] = False
+            ctx = ctx.replace(avail=masked, node_mask=mask)
         return self.inner.plan(ctx)

@@ -73,6 +73,14 @@ class DispatchContext:
     avail: np.ndarray                     # int64[N, R] current availability
     capacity: np.ndarray                  # int64[N, R] node capacities
     resource_types: Tuple[str, ...] = ()
+    # bool[N] dispatch-eligibility mask, or None when every node is
+    # eligible.  Ineligible nodes (down / quarantined after a failure —
+    # DESIGN.md §9) additionally have their ``avail`` row floored to -1,
+    # so every value-based fit test (``avail >= req``, including
+    # zero-request columns) excludes them without any allocator changes;
+    # the mask itself exists for consumers that reason about *future*
+    # availability (the EBF release walk filters released nodes by it).
+    node_mask: Optional[np.ndarray] = None
     event_manager: object = field(default=None, repr=False, compare=False)
     # queued rows in the job table (FIFO order); empty when built by hand
     queue_rows: np.ndarray = field(default_factory=lambda: _EMPTY_ROWS,
@@ -177,11 +185,20 @@ class DispatchContext:
         n_nodes = table.requested_nodes[rows]
         est = np.maximum(table.expected_duration[rows], 1)
         queued = table.queued_time[rows]     # always set once QUEUED
+        avail = rm.available.copy()
+        mask = None
+        eligibility = getattr(event_manager, "node_eligibility", None)
+        if eligibility is not None:
+            mask = eligibility(int(now))
+            if mask is not None and mask.all():
+                mask = None                  # no failures in effect
+            if mask is not None:
+                avail[~mask] = -1            # value-floor: never fits
         return cls(
             now=int(now), req=req, n_nodes=n_nodes,
-            est=est, queued_time=queued, avail=rm.available.copy(),
+            est=est, queued_time=queued, avail=avail,
             capacity=rm.capacity,
-            resource_types=tuple(rm.resource_types),
+            resource_types=tuple(rm.resource_types), node_mask=mask,
             event_manager=event_manager, queue_rows=rows, table=table)
 
 

@@ -160,6 +160,14 @@ class EasyBackfilling(SchedulerBase):
             releases.append((est, np.asarray(nodes, dtype=np.int64),
                              ctx.req[qi]))
         releases.sort(key=lambda r: r[0])
+        mask = ctx.node_mask
+        if mask is not None:
+            # ineligible (down/quarantined) nodes must never fit, even at
+            # shadow time: drop their release contributions so the scan's
+            # cumulative availability stays at the -1 floor there (the
+            # fleet engine's shadow walk masks its fit count instead —
+            # same decisions, DESIGN.md §9)
+            releases = [(t, idx[mask[idx]], vec) for t, idx, vec in releases]
         return releases
 
     @staticmethod

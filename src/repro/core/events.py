@@ -42,6 +42,19 @@ _EMPTY_ROWS = np.zeros(0, dtype=np.int64)
 class EventManager:
     """Owns simulation time, the job table, and the event queues."""
 
+    # Failure-schedule state as CLASS-level defaults: instances restored
+    # through ``HostSnapshot`` (built via ``__new__``) degrade gracefully
+    # to "no failure schedule" instead of raising AttributeError.
+    _fail_t: Optional[np.ndarray] = None    # int64[E] event times (sorted)
+    _fail_node: Optional[np.ndarray] = None
+    _fail_kind: Optional[np.ndarray] = None  # True = FAIL, False = REPAIR
+    _fcursor: int = 0
+    _ckpt = None                             # CheckpointRestartPolicy | None
+    quarantine_s: int = 0
+    n_requeued: int = 0
+    lost_work_s: int = 0
+    node_downtime_s: int = 0
+
     def __init__(
         self,
         job_source: Iterator[SourceItem],
@@ -96,16 +109,116 @@ class EventManager:
                            (int(table.submit[row]), self._seq, row))
             self._seq += 1
 
+    # ------------------------------------------------------------------ fail
+    def set_failure_schedule(self, times, nodes, is_fail, *,
+                             checkpoint=None, quarantine_s: int = 0) -> None:
+        """Install a precomputed node FAIL/REPAIR event trace (e.g.
+        ``FailureInjector.arrays()``) as a native event source.
+
+        A FAIL event marks the node down + quarantined, preempts every
+        job assigned to it and re-queues the victims (``requeue_job``),
+        with ``checkpoint`` (a ``CheckpointRestartPolicy``) deciding the
+        remaining duration; a REPAIR marks it back up.  Quarantine is
+        time-based — a node is dispatch-eligible iff it is up AND its
+        quarantine deadline has passed (:meth:`node_eligibility`) — and
+        deliberately does NOT mutate ``ResourceManager`` capacity, so
+        the static capacity-fit check stays valid (DESIGN.md §9).
+
+        Call right after construction, before the first ``advance_to``;
+        events at or before the current time would be skipped.
+        """
+        times = np.ascontiguousarray(times, dtype=np.int64)
+        nodes = np.ascontiguousarray(nodes, dtype=np.int64)
+        is_fail = np.ascontiguousarray(is_fail, dtype=bool)
+        if not (times.shape == nodes.shape == is_fail.shape):
+            raise ValueError("failure schedule arrays must share a shape")
+        if times.size and (np.diff(times) < 0).any():
+            raise ValueError("failure schedule must be sorted by time")
+        self._fail_t = times
+        self._fail_node = nodes
+        self._fail_kind = is_fail
+        self._fcursor = 0
+        self._ckpt = checkpoint
+        self.quarantine_s = int(quarantine_s)
+        n = self.rm.capacity.shape[0]
+        self._node_up = np.ones(n, dtype=bool)
+        self._quar_until = np.zeros(n, dtype=np.int64)
+        self._down_since = np.full(n, -1, dtype=np.int64)
+        self.n_requeued = 0
+        self.lost_work_s = 0
+        self.node_downtime_s = 0
+        # per-row last-enqueue stamps: victims re-enter the FIFO ring in
+        # their previous enqueue order (the fleet engine re-ranks by old
+        # fifo_rank — same relative order)
+        self._enq_stamp: Dict[int, int] = {}
+        self._rank_ctr = 0
+
+    def node_eligibility(self, now: int) -> Optional[np.ndarray]:
+        """bool[N] dispatch-eligibility mask (None without a schedule):
+        a node takes new work iff it is up and out of quarantine."""
+        if self._fail_t is None:
+            return None
+        return self._node_up & (self._quar_until <= now)
+
+    def _process_failures(self, t: int) -> None:
+        """Apply every FAIL/REPAIR event at or before ``t`` (called from
+        ``advance_to`` between completions and submissions, so same-time
+        completions escape the failure and victims re-enter the queue
+        ahead of same-time submissions)."""
+        table = self.table
+        fail_t, fail_node, fail_kind = \
+            self._fail_t, self._fail_node, self._fail_kind
+        while self._fcursor < len(fail_t) and \
+                fail_t[self._fcursor] <= t:
+            i = self._fcursor
+            self._fcursor += 1
+            ev_t = int(fail_t[i])
+            v = int(fail_node[i])
+            if fail_kind[i]:                 # ---- FAIL
+                if not self._node_up[v]:
+                    continue                 # duplicate fail: no-op
+                self._node_up[v] = False
+                self._down_since[v] = ev_t
+                self._quar_until[v] = ev_t + self.quarantine_s
+                victims = [r for r in self._running
+                           if v in table.assigned(r)]
+                victims.sort(key=lambda r: self._enq_stamp.get(r, 0))
+                for row in victims:
+                    ran = ev_t - int(table.start_time[row])
+                    dur0 = int(table.duration[row])
+                    job = table.view(row)
+                    self.requeue_job(job)
+                    saved = 0
+                    if self._ckpt is not None:
+                        self._ckpt.on_requeue(job, ran)
+                        saved = dur0 - int(table.duration[row])
+                    self.n_requeued += 1
+                    self.lost_work_s += ran - saved
+            else:                            # ---- REPAIR
+                if self._node_up[v]:
+                    continue                 # repair of an up node: no-op
+                self._node_up[v] = True
+                self.node_downtime_s += ev_t - int(self._down_since[v])
+                self._down_since[v] = -1
+
     # ------------------------------------------------------------------ time
     def next_event_time(self) -> Optional[int]:
+        t: Optional[int] = None
         if self.loaded:
             t = self.loaded[0][0]
             if self._completions and self._completions[0][0] < t:
                 t = self._completions[0][0]
-            return t
-        if self._completions:
-            return self._completions[0][0]
-        return None
+        elif self._completions:
+            t = self._completions[0][0]
+        # a pending FAIL/REPAIR is a wake-up only while it can affect
+        # anything (jobs running or queued) — trailing schedule events
+        # after the last job must not keep an idle simulation alive
+        if self._fail_t is not None and \
+                self._fcursor < len(self._fail_t) and \
+                (self._running or self._qpos):
+            ft = int(self._fail_t[self._fcursor])
+            t = ft if t is None else min(t, ft)
+        return t
 
     def has_events(self) -> bool:
         return bool(self.loaded or self._completions or self._qpos)
@@ -119,6 +232,9 @@ class EventManager:
         self._qlive[pos] = True
         self._qpos[row] = pos
         self._qtail = pos + 1
+        if self._fail_t is not None:
+            self._enq_stamp[row] = self._rank_ctr
+            self._rank_ctr += 1
 
     def _dequeue(self, row: int) -> None:
         pos = self._qpos.pop(row, None)
@@ -207,6 +323,9 @@ class EventManager:
                 if on_complete is not None:
                     on_complete(table.view(row))
                 table.free_row(row)
+
+        if self._fail_t is not None:
+            self._process_failures(t)
 
         submitted: List[int] = []
         loaded = self.loaded

@@ -69,7 +69,17 @@ class Simulator:
         lookahead_jobs: int = 8192,
         output_dir: str = "results",
         name: Optional[str] = None,
+        failures=None,
+        checkpoint=None,
+        quarantine_s: int = 0,
     ) -> None:
+        """``failures`` (a ``FailureInjector`` or its ``(times, nodes,
+        is_fail)`` arrays) installs a native node FAIL/REPAIR event
+        schedule on the event manager (DESIGN.md §9): failures preempt +
+        requeue victims, ``checkpoint`` (a ``CheckpointRestartPolicy``)
+        decides the remaining duration, and failed/quarantined nodes are
+        masked out of every dispatcher's context for ``quarantine_s``
+        seconds after each failure."""
         if isinstance(sys_config, str):
             with open(sys_config) as fh:
                 sys_config = json.load(fh)
@@ -85,6 +95,9 @@ class Simulator:
         if job_factory is None:
             job_factory = default_job_factory(self.rm)
         self.job_factory = job_factory
+        self.failures = failures
+        self.checkpoint = checkpoint
+        self.quarantine_s = quarantine_s
 
     # ------------------------------------------------------------------
     def _row_iterator(self, table: JobTable) -> Iterator:
@@ -139,6 +152,11 @@ class Simulator:
             self._row_iterator(table), self.rm,
             lookahead_jobs=self._lookahead, on_complete=on_complete,
             table=table)
+        if self.failures is not None:
+            arrays = self.failures.arrays() \
+                if hasattr(self.failures, "arrays") else self.failures
+            em.set_failure_schedule(*arrays, checkpoint=self.checkpoint,
+                                    quarantine_s=self.quarantine_s)
         self.event_manager = em
 
         status = SystemStatus() if system_status else None
@@ -251,6 +269,12 @@ class Simulator:
             "mem_avg_mb": (sum(mem_samples) / len(mem_samples)) if mem_samples else rss_mb(),
             "mem_max_mb": max(mem_samples) if mem_samples else rss_mb(),
         }
+        if em._fail_t is not None:
+            self.summary["failures"] = {
+                "requeued_jobs": em.n_requeued,
+                "lost_work_s": em.lost_work_s,
+                "node_downtime_s": em.node_downtime_s,
+            }
         if write_output:
             out_fh.close()
             bench_fh.write(_dumps({"summary": self.summary}) + b"\n")

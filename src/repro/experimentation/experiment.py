@@ -87,7 +87,10 @@ class Experiment:
             return "custom-start-kwargs"
         if not isinstance(self.workload, (SyntheticWorkload, list, tuple)):
             return "host-only-workload"
-        extra = set(self.sim_kwargs) - {"job_factory", "lookahead_jobs"}
+        # failure scenarios lower onto the compiled engine (DESIGN.md §9)
+        extra = set(self.sim_kwargs) - {"job_factory", "lookahead_jobs",
+                                        "failures", "checkpoint",
+                                        "quarantine_s"}
         if extra:
             return "host-only-sim-kwargs:" + ",".join(sorted(extra))
         from ..fleet.engine import compiles
@@ -106,6 +109,10 @@ class Experiment:
         factory = self.sim_kwargs.get("job_factory")
         if factory is None:
             factory = default_job_factory(ResourceManager(self.sys_config))
+        failures = self.sim_kwargs.get("failures")
+        quarantine_s = int(self.sim_kwargs.get("quarantine_s", 0))
+        ckpt_every_s = int(getattr(self.sim_kwargs.get("checkpoint"),
+                                   "ckpt_every_s", 0) or 0)
 
         runner = FleetRunner()
         sims, keys = [], []
@@ -117,7 +124,8 @@ class Experiment:
                 sims.append(FleetRunner.build(
                     self._rep_name(name, rep), workload, self.sys_config,
                     s_code, alloc_id=a_code, job_factory=factory,
-                    seed=seed))
+                    seed=seed, failures=failures,
+                    quarantine_s=quarantine_s, ckpt_every_s=ckpt_every_s))
                 keys.append((name, rep))
         result = runner.run(sims)
 

@@ -74,7 +74,8 @@ from jax import lax
 
 from ..kernels.alloc_score import alloc_score_batch_pallas
 from ..kernels.ebf_shadow import shadow_walk
-from .state import (COMPLETED, INF_I, QUEUED, REJECTED, RUNNING, SimState)
+from .state import (COMPLETED, INF_I, QUEUED, REJECTED, RUNNING, SimState,
+                    UNSET_I)
 
 SCHED_FIFO, SCHED_SJF, SCHED_LJF, SCHED_EBF = 0, 1, 2, 3
 SCHED_NAMES = {SCHED_FIFO: "FIFO", SCHED_SJF: "SJF", SCHED_LJF: "LJF",
@@ -179,20 +180,25 @@ def _priority_order(s: SimState):
          lambda: rank])                      # EBF runs FIFO priority
 
 
-def _select_nodes(alloc_id, pool, capacity, reqv, need, k_cap, pref):
+def _select_nodes(alloc_id, pool, capacity, reqv, need, k_cap, pref,
+                  elig=None):
     """Allocator probe against ``pool`` availability: FirstFit (node-id
     order) or BestFit (busiest-first stable order) via one shared
     cumsum-and-scatter over the policy's node ordering.
 
     Returns ``(ok, sel [N] bool, nodes [K])``; ``pref`` optionally ANDs
     a precomputed fit prefilter (the per-round kernel launch) into the
-    live fit mask.
+    live fit mask; ``elig`` (bool[N], optional) ANDs the failure-aware
+    node-eligibility mask — the compiled twin of the host's -1
+    availability floor on down/quarantined nodes (DESIGN.md §9).
     """
     n = pool.shape[0]
     node_ids = jnp.arange(n, dtype=jnp.int32)
     fitn = (pool >= reqv[None, :]).all(axis=1)
     if pref is not None:
         fitn = fitn & pref
+    if elig is not None:
+        fitn = fitn & elig
     # BestFit key: fraction-in-use summed over resource types, float32 —
     # identical arithmetic to kernels/ref.alloc_score*, whose ordering is
     # pinned trace-equal to the host's float64 np.argsort
@@ -212,7 +218,7 @@ def _select_nodes(alloc_id, pool, capacity, reqv, need, k_cap, pref):
 
 
 def _dispatch_round(s: SimState, state, start, end, assigned, avail, t,
-                    fit_round, pri, q0):
+                    fit_round, pri, q0, elig=None):
     """One full dispatch round at event time ``t``, in three phases.
 
     **Greedy loop** — select the highest-priority queued job, probe the
@@ -242,7 +248,9 @@ def _dispatch_round(s: SimState, state, start, end, assigned, avail, t,
     order from :func:`_priority_order`; ``q0`` the number of queued
     rows at round entry (the round never re-queues, so the count just
     decrements per start).  Returns the updated job/node arrays and the
-    number of jobs started this event.
+    number of jobs started this event.  ``elig`` (bool[N] or None) is
+    the failure-aware node-eligibility mask, threaded through every
+    allocator probe, both bulk fit counts, and the shadow walk.
     """
     k_cap = assigned.shape[1]
     is_ebf = s.sched_id == SCHED_EBF
@@ -261,7 +269,7 @@ def _dispatch_round(s: SimState, state, start, end, assigned, avail, t,
         need = s.n_need[idx]
         pref = None if fit_round is None else fit_round[idx] > 0
         ok_fit, sel, nodes = _select_nodes(
-            s.alloc_id, avail, s.capacity, reqv, need, k_cap, pref)
+            s.alloc_id, avail, s.capacity, reqv, need, k_cap, pref, elig)
         ok = has_cand & ok_fit
         dec = sel[:, None].astype(jnp.int32) * reqv[None, :]
         avail = jnp.where(ok, avail - dec, avail)
@@ -296,11 +304,13 @@ def _dispatch_round(s: SimState, state, start, end, assigned, avail, t,
     rel = jnp.where((state == RUNNING) & has_head,
                     jnp.maximum(start + s.est, t + 1), INF_I)
     found, shadow_t, sh_avail = shadow_walk(avail, rel, assigned, s.req,
-                                            head_req, head_need)
+                                            head_req, head_need,
+                                            node_ok=elig)
     # head reservation at shadow time — shadow availability can exceed
     # the round-start availability, so NO kernel prefilter
     _, sel_h, _ = _select_nodes(
-        s.alloc_id, sh_avail, s.capacity, head_req, head_need, k_cap, None)
+        s.alloc_id, sh_avail, s.capacity, head_req, head_need, k_cap, None,
+        elig)
     enter_bf = has_head & found
     extra = jnp.where(
         enter_bf,
@@ -328,10 +338,13 @@ def _dispatch_round(s: SimState, state, start, end, assigned, avail, t,
         # one trip per uncovered row and loses far more than the
         # narrower tensor saves.
         pool_b = jnp.minimum(avail, extra)
-        cnt_a = (avail[None, :, :] >= s.req[:, None, :]).all(
-            axis=2).sum(axis=1, dtype=jnp.int32)                 # [M]
-        cnt_b = (pool_b[None, :, :] >= s.req[:, None, :]).all(
-            axis=2).sum(axis=1, dtype=jnp.int32)
+        fit_a = (avail[None, :, :] >= s.req[:, None, :]).all(axis=2)
+        fit_b = (pool_b[None, :, :] >= s.req[:, None, :]).all(axis=2)
+        if elig is not None:
+            fit_a = fit_a & elig[None, :]
+            fit_b = fit_b & elig[None, :]
+        cnt_a = fit_a.sum(axis=1, dtype=jnp.int32)               # [M]
+        cnt_b = fit_b.sum(axis=1, dtype=jnp.int32)
         can_start = jnp.where(before_all, cnt_a, cnt_b) >= s.n_need
         bf_cand = queued & (s.fifo_rank > cursor) & can_start
         idx = jnp.argmin(
@@ -347,7 +360,7 @@ def _dispatch_round(s: SimState, state, start, end, assigned, avail, t,
         # constraint — the AND is a consistency fusion
         pref = None if fit_round is None else fit_round[idx] > 0
         ok_fit, sel, nodes = _select_nodes(
-            s.alloc_id, pool, s.capacity, reqv, need, k_cap, pref)
+            s.alloc_id, pool, s.capacity, reqv, need, k_cap, pref, elig)
         ok = has_cand & ok_fit
 
         dec = sel[:, None].astype(jnp.int32) * reqv[None, :]
@@ -382,21 +395,46 @@ def _advance_impl(s: SimState, use_kernel: bool, interpret: bool) -> SimState:
     n, r = s.avail.shape
     k_cap = s.assigned.shape[1]
     e = s.log_t.shape[0]
-    # the policy's priority order is fully static (see _priority_order):
-    # one sort per sim replaces a lex argmin per dispatch trip
-    pri = _priority_order(s)
+    f_cap = s.fail_ev.shape[0]
+    # static switch: F == 0 compiles the exact pre-failure engine — all
+    # failure machinery below vanishes at trace time
+    has_fail = f_cap > 0
+    # runaway guard: without failures every iteration admits or retires
+    # one of <= 2M job events; a failure schedule adds F event times plus
+    # at most one extra completion per (victim, FAIL event) requeue pair.
+    # The log keeps its 2M + F + 8 slots and clamps on overflow.
+    guard = 2 * m + 8 + (f_cap * (m + 1) if has_fail else 0)
+    # the policy's priority order is static without failures (see
+    # _priority_order) — one sort per sim replaces a lex argmin per
+    # dispatch trip.  Requeues re-rank victims mid-run, so the order is
+    # carried in the state and recomputed after each failure drain.
+    s = s._replace(pri=_priority_order(s))
 
     def cond(s: SimState):
-        return (s.steps < e) & ((s.ptr < s.n_pending) |
-                                (s.state == RUNNING).any())
+        go = (s.ptr < s.n_pending) | (s.state == RUNNING).any()
+        if has_fail:
+            # queued jobs may be waiting on a REPAIR / quarantine expiry
+            # that only a later failure event can unblock
+            queued = s.n_submitted - s.n_rejected - s.n_started
+            go = go | ((queued > 0) & (s.fptr < s.n_fail))
+        return (s.steps < guard) & go
 
     def body(s: SimState) -> SimState:
-        # ---- next event time: min(next submission, next completion) --
+        # ---- next event time: min(submission, completion, failure) ---
         pidx = s.pending[jnp.clip(s.ptr, 0, m - 1)]
         t_sub = jnp.where(s.ptr < s.n_pending, s.submit[pidx], INF_I)
         running = s.state == RUNNING
         t_end = jnp.where(running, s.end, INF_I).min()
         t = jnp.minimum(t_sub, t_end)
+        if has_fail:
+            # a FAIL/REPAIR is a wake-up only while jobs are live
+            # (running or queued) — mirrors EventManager.next_event_time;
+            # events <= t set by a job event still drain below
+            n_live = s.n_submitted - s.n_rejected - s.n_completed
+            t_fail = jnp.where(
+                (s.fptr < s.n_fail) & (n_live > 0),
+                s.fail_ev[jnp.clip(s.fptr, 0, f_cap - 1), 0], INF_I)
+            t = jnp.minimum(t, t_fail)
 
         # ---- completions first (as advance_to), retired ONE at a time:
         # a typical event completes a single job, so an O(1)-sized inner
@@ -424,6 +462,114 @@ def _advance_impl(s: SimState, use_kernel: bool, interpret: bool) -> SimState:
 
         state, avail, n_completed = lax.while_loop(
             c_cond, c_body, (s.state, s.avail, s.n_completed))
+
+        # ---- failure drain: FAIL preempts + requeues, REPAIR restores -
+        # (between completions and submissions, exactly advance_to's
+        # order: a job completing at t escapes a failure at t; victims
+        # re-rank ahead of same-t submissions).  One event per trip.
+        pri = s.pri
+        elig = None
+        if has_fail:
+            def f_cond(c):
+                fptr = c[12]
+                ev_t = s.fail_ev[jnp.clip(fptr, 0, f_cap - 1), 0]
+                # t < INF_I: a finished vmap lane still executes this
+                # body masked with t = INF_I and must not drain the tail
+                # of its schedule (the host leaves trailing events
+                # unprocessed too)
+                return (fptr < s.n_fail) & (ev_t <= t) & (t < INF_I)
+
+            def f_body(c):
+                (state, start, end, assigned, avail, duration, fifo_rank,
+                 rank_ctr, n_started, node_up, quar_until, down_since,
+                 fptr, n_requeued, lost_work, downtime) = c
+                ev = s.fail_ev[jnp.clip(fptr, 0, f_cap - 1)]
+                ev_t, v, kind = ev[0], ev[1], ev[2]
+                up_v = node_up[v] > 0
+                do_fail = (kind == 1) & up_v        # FAIL on a down node
+                do_rep = (kind == 0) & (~up_v)      # / REPAIR on an up
+                                                    # node are no-ops
+                # victims: running rows with the failed node in their
+                # assignment (pad slots hold n and never match)
+                vm = do_fail & (state == RUNNING) & \
+                    (assigned == v).any(axis=1)
+                # release every victim's full allocation in one scatter;
+                # pad columns land on the trash row n and drop out
+                contrib = jnp.where(
+                    vm[:, None, None],
+                    jnp.broadcast_to(s.req[:, None, :], (m, k_cap, r)), 0)
+                add = jnp.zeros((n + 1, r), jnp.int32).at[assigned].add(
+                    contrib)
+                avail = avail + add[:n]
+                nv = vm.sum(dtype=jnp.int32)
+                # checkpoint/restart credit (CheckpointRestartPolicy):
+                # a victim re-runs only the work since its last
+                # checkpoint boundary; ck == 0 means full re-run
+                ran = ev_t - start                  # masked by vm below
+                ck = s.ckpt_every_s
+                saved = jnp.where(ck > 0,
+                                  (ran // jnp.maximum(ck, 1)) * ck, 0)
+                saved = jnp.minimum(saved, jnp.maximum(duration - 1, 0))
+                new_dur = jnp.maximum(duration - saved, 1)
+                lost_work = lost_work + jnp.where(
+                    vm, ran - (duration - new_dur), 0
+                ).sum(dtype=jnp.int32)
+                duration = jnp.where(vm, new_dur, duration)
+                # victims rejoin the queue at the back, ordered by their
+                # previous enqueue order (= current fifo_rank) — the
+                # host requeues through the same ring in stamp order
+                key = jnp.where(vm, fifo_rank, INF_I)
+                order = jnp.argsort(key)
+                pos = jnp.arange(m, dtype=jnp.int32)
+                newr = jnp.where(pos < nv, rank_ctr + pos,
+                                 fifo_rank[order])
+                fifo_rank = fifo_rank.at[order].set(newr)
+                rank_ctr = rank_ctr + nv
+                state = jnp.where(vm, QUEUED, state).astype(jnp.int32)
+                start = jnp.where(vm, UNSET_I, start)
+                end = jnp.where(vm, INF_I, end)
+                assigned = jnp.where(vm[:, None], n, assigned)
+                n_started = n_started - nv
+                n_requeued = n_requeued + nv
+                downtime = downtime + jnp.where(
+                    do_rep, ev_t - down_since[v], 0)
+                node_up = node_up.at[v].set(
+                    jnp.where(do_fail, 0,
+                              jnp.where(do_rep, 1, node_up[v])))
+                quar_until = quar_until.at[v].set(
+                    jnp.where(do_fail, ev_t + s.quarantine_s,
+                              quar_until[v]))
+                down_since = down_since.at[v].set(
+                    jnp.where(do_fail, ev_t,
+                              jnp.where(do_rep, -1, down_since[v])))
+                return (state, start, end, assigned, avail, duration,
+                        fifo_rank, rank_ctr, n_started, node_up,
+                        quar_until, down_since, fptr + 1, n_requeued,
+                        lost_work, downtime)
+
+            (state, start_f, end_f, assigned_f, avail, duration_f,
+             fifo_rank_f, rank_ctr_f, n_started_f, node_up, quar_until,
+             down_since, fptr, n_requeued, lost_work,
+             downtime) = lax.while_loop(
+                f_cond, f_body,
+                (state, s.start, s.end, s.assigned, avail, s.duration,
+                 s.fifo_rank, s.rank_ctr, s.n_started, s.node_up,
+                 s.quar_until, s.down_since, s.fptr, s.n_requeued,
+                 s.lost_work_s, s.node_downtime_s))
+            s = s._replace(
+                start=start_f, end=end_f, assigned=assigned_f,
+                duration=duration_f, fifo_rank=fifo_rank_f,
+                rank_ctr=rank_ctr_f, n_started=n_started_f,
+                node_up=node_up, quar_until=quar_until,
+                down_since=down_since, fptr=fptr, n_requeued=n_requeued,
+                lost_work_s=lost_work, node_downtime_s=downtime)
+            # requeues shifted ranks (victims re-ranked, pending rows'
+            # future ranks moved by nv) -> refresh the carried order
+            pri = _priority_order(s)
+            s = s._replace(pri=pri)
+            # dispatch-eligibility at this event: up and out of
+            # quarantine — EventManager.node_eligibility(t)
+            elig = (node_up > 0) & (quar_until <= t)
 
         # ---- submission batch: contiguous pending prefix with T_sb <= t,
         # admitted one row per trip in (T_sb, seq) order — ranks are
@@ -469,7 +615,7 @@ def _advance_impl(s: SimState, use_kernel: bool, interpret: bool) -> SimState:
         (state, start, end, assigned, avail, n_started,
          started_evt) = _dispatch_round(
             s1, state, s1.start, s1.end, s1.assigned, avail, t, fit_round,
-            pri, q0)
+            pri, q0, elig)
         n_rounds = s.n_rounds + any_queued.astype(jnp.int32)
 
         # ---- per-event log (host bench-line schema) -------------------
@@ -490,7 +636,18 @@ def _advance_impl(s: SimState, use_kernel: bool, interpret: bool) -> SimState:
             log_t=log_t, log_queue=log_queue, log_running=log_running,
             log_started=log_started)
 
-    return lax.while_loop(cond, body, s)
+    out = lax.while_loop(cond, body, s)
+    if has_fail:
+        # host livelock parity: queued jobs that outlast every event
+        # (submissions, completions, the failure schedule) can never
+        # start; the host simulator rejects them without another event
+        # point, so no event is counted here either
+        leftover = out.state == QUEUED
+        out = out._replace(
+            state=jnp.where(leftover, REJECTED,
+                            out.state).astype(jnp.int32),
+            n_rejected=out.n_rejected + leftover.sum(dtype=jnp.int32))
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))

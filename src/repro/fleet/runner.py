@@ -105,6 +105,12 @@ class FleetResult:
             "mem_max_mb": rss,
             "engine": "fleet",
         }
+        if int(f.n_fail) > 0:
+            out["failures"] = {
+                "requeued_jobs": int(f.n_requeued),
+                "lost_work_s": int(f.lost_work_s),
+                "node_downtime_s": int(f.node_downtime_s),
+            }
         if sim.seed is not None:
             out["seed"] = sim.seed
         return out
@@ -253,11 +259,15 @@ class FleetRunner:
     @staticmethod
     def build(name: str, workload: Iterable, sys_config: Dict,
               sched_id: int, alloc_id: int = 0, job_factory=None,
-              seed: Optional[int] = None) -> FleetSim:
-        """Materialize one grid point from a workload."""
+              seed: Optional[int] = None, failures=None,
+              quarantine_s: int = 0, ckpt_every_s: int = 0) -> FleetSim:
+        """Materialize one grid point from a workload.  ``failures`` /
+        ``quarantine_s`` / ``ckpt_every_s`` install a device-resident
+        FAIL/REPAIR schedule (``Simulator(failures=...)`` semantics)."""
         state, meta = SimState.from_workload(
             workload, sys_config, job_factory=job_factory,
-            sched_id=sched_id, alloc_id=alloc_id)
+            sched_id=sched_id, alloc_id=alloc_id, failures=failures,
+            quarantine_s=quarantine_s, ckpt_every_s=ckpt_every_s)
         return FleetSim(name=name, state=state, meta=meta,
                         sched_id=sched_id, alloc_id=alloc_id, seed=seed)
 
@@ -322,7 +332,12 @@ class FleetRunner:
         jax = self._jax
         m = _bucket_rows(max(s.state.n_rows for s in sims))
         k = _bucket_width(max(s.state.assigned.shape[1] for s in sims))
-        padded = [s.state.pad_to(m, k) for s in sims]
+        # failure schedules pad like jobs: bucket to a multiple of 16 so
+        # nearby schedule lengths share an executable; fev == 0 (no sim
+        # in the batch has a schedule) compiles the failure-free engine
+        fev = max(s.state.fail_ev.shape[0] for s in sims)
+        fev = -(-fev // 16) * 16 if fev else 0
+        padded = [s.state.pad_to(m, k, fev) for s in sims]
 
         mesh = self.mesh
         n_dev = 1
@@ -351,8 +366,8 @@ class FleetRunner:
         stacked = jax.tree.map(lambda *xs: np.stack(xs), *batch)
 
         n, r = padded[0].avail.shape
-        key = (len(batch), m, k, n, r, self.use_kernel, self.interpret,
-               mesh_key, jax.default_backend())
+        key = (len(batch), m, k, fev, n, r, self.use_kernel,
+               self.interpret, mesh_key, jax.default_backend())
         compiled = self._compile_cache.get(key)
         cache_hit = compiled is not None
         compile_time = 0.0

@@ -103,6 +103,25 @@ class SimState(NamedTuple):
     log_queue: np.ndarray
     log_running: np.ndarray
     log_started: np.ndarray
+    # --- failure schedule + node health (DESIGN.md §9) ------------------
+    # ``fail_ev [F, 3]`` is the sorted (time, node, kind) schedule with
+    # kind 1 = FAIL, 0 = REPAIR; ``F = 0`` means "no failure schedule"
+    # and compiles the exact pre-failure engine (the failure machinery is
+    # a static no-op).  ``pri`` carries the policy's priority positions
+    # through the loop because requeues re-rank victims mid-run — without
+    # failures it is loop-invariant and XLA hoists it.
+    pri: np.ndarray               # [M] static priority positions
+    fail_ev: np.ndarray           # [F, 3] (time, node, kind); kind 1=FAIL
+    fptr: np.ndarray              # next failure event (0-d)
+    n_fail: np.ndarray            # valid failure events (0-d)
+    node_up: np.ndarray           # [N] 1 = up, 0 = down
+    quar_until: np.ndarray        # [N] dispatch-ineligible until this time
+    down_since: np.ndarray        # [N] fail time while down, -1 when up
+    quarantine_s: np.ndarray      # 0-d quarantine window after each FAIL
+    ckpt_every_s: np.ndarray      # 0-d checkpoint period (0 = no credit)
+    n_requeued: np.ndarray        # victims preempted + re-queued
+    lost_work_s: np.ndarray       # re-run seconds (net of ckpt credit)
+    node_downtime_s: np.ndarray   # summed fail->repair outage seconds
 
     # ------------------------------------------------------------------
     @property
@@ -114,19 +133,24 @@ class SimState(NamedTuple):
         return int(self.avail.shape[0])
 
     # ------------------------------------------------------------------
-    def pad_to(self, m: int, k: int) -> "SimState":
-        """Grow row capacity to ``m`` and the assignment width to ``k``
-        (no-op if already that size) — fleet batching pads every sim to
-        the common shape before stacking.  Pad rows carry the blank
-        defaults (COMPLETED state, INF submit), which the engine never
-        visits."""
+    def pad_to(self, m: int, k: int, fev: Optional[int] = None) -> "SimState":
+        """Grow row capacity to ``m``, the assignment width to ``k`` and
+        the failure-schedule length to ``fev`` (no-op if already that
+        size) — fleet batching pads every sim to the common shape before
+        stacking.  Pad rows carry the blank defaults (COMPLETED state,
+        INF submit); pad failure events carry ``t = INF_I``, which the
+        drain loop never reaches."""
         m0, k0 = self.n_rows, self.assigned.shape[1]
-        if m < m0 or k < k0:
-            raise ValueError(f"cannot shrink ({m0},{k0}) -> ({m},{k})")
-        if m == m0 and k == k0:
+        f0 = self.fail_ev.shape[0]
+        if fev is None:
+            fev = f0
+        if m < m0 or k < k0 or fev < f0:
+            raise ValueError(
+                f"cannot shrink ({m0},{k0},{f0}) -> ({m},{k},{fev})")
+        if m == m0 and k == k0 and fev == f0:
             return self
         n, r = self.avail.shape
-        f = self._blank(m, n, r, k)
+        f = self._blank(m, n, r, k, fev)
         e0 = self.log_t.shape[0]
         for name, val in self._asdict().items():
             cur = np.asarray(val)
@@ -137,9 +161,12 @@ class SimState(NamedTuple):
             elif name == "assigned":
                 # pad columns keep the old trash id (== n) from _blank
                 f[name][:m0, :k0] = cur
+            elif name == "fail_ev":
+                f[name][:f0] = cur
             elif name.startswith("log_"):
                 f[name][:e0] = cur
-            elif name in ("avail", "capacity"):
+            elif name in ("avail", "capacity", "node_up", "quar_until",
+                          "down_since"):
                 f[name] = cur
             else:
                 f[name][:m0] = cur
@@ -147,9 +174,12 @@ class SimState(NamedTuple):
 
     # ------------------------------------------------------------------
     @classmethod
-    def _blank(cls, m: int, n: int, r: int, k: int) -> Dict[str, np.ndarray]:
-        e = 2 * m + 8
+    def _blank(cls, m: int, n: int, r: int, k: int,
+               fev: int = 0) -> Dict[str, np.ndarray]:
+        e = 2 * m + fev + 8
         i32 = np.int32
+        fail_ev = np.zeros((fev, 3), i32)
+        fail_ev[:, 0] = INF_I                 # pad events never fire
         return dict(
             submit=np.full(m, INF_I, i32), duration=np.zeros(m, i32),
             est=np.ones(m, i32), n_need=np.zeros(m, i32),
@@ -166,6 +196,12 @@ class SimState(NamedTuple):
             steps=i32(0),
             log_t=np.zeros(e, i32), log_queue=np.zeros(e, i32),
             log_running=np.zeros(e, i32), log_started=np.zeros(e, i32),
+            pri=np.zeros(m, i32), fail_ev=fail_ev,
+            fptr=i32(0), n_fail=i32(0),
+            node_up=np.ones(n, i32), quar_until=np.zeros(n, i32),
+            down_since=np.full(n, -1, i32),
+            quarantine_s=i32(0), ckpt_every_s=i32(0),
+            n_requeued=i32(0), lost_work_s=i32(0), node_downtime_s=i32(0),
         )
 
     # ------------------------------------------------------------------
@@ -179,6 +215,9 @@ class SimState(NamedTuple):
         alloc_id: int = 0,
         k_nodes: Optional[int] = None,
         capacity_rows: Optional[int] = None,
+        failures=None,
+        quarantine_s: int = 0,
+        ckpt_every_s: int = 0,
     ) -> Tuple["SimState", "SimMeta"]:
         """Load a whole workload into a fresh fixed-capacity state.
 
@@ -187,6 +226,11 @@ class SimState(NamedTuple):
         then the columns are exported with the pending window sorted by
         ``(T_sb, seq)``, exactly the order the host event manager's
         LOADED heap pops.
+
+        ``failures`` (a ``FailureInjector`` or its ``(times, nodes,
+        is_fail)`` arrays) installs the native FAIL/REPAIR schedule with
+        the same semantics as ``Simulator(failures=...)``; the export
+        below carries it into the device-resident ``fail_ev`` schedule.
         """
         rm = ResourceManager(sys_config)
         factory = job_factory or JobFactory()
@@ -209,6 +253,15 @@ class SimState(NamedTuple):
         # _exhausted (the window check is len(loaded) < lookahead)
         em = EventManager(iter(rows), rm, table=table,
                           lookahead_jobs=len(rows) + 1)
+        if failures is not None:
+            arrays = failures.arrays() \
+                if hasattr(failures, "arrays") else failures
+            ckpt = None
+            if ckpt_every_s:
+                from ..cluster.failures import CheckpointRestartPolicy
+                ckpt = CheckpointRestartPolicy(ckpt_every_s)
+            em.set_failure_schedule(*arrays, checkpoint=ckpt,
+                                    quarantine_s=quarantine_s)
         return cls.from_event_manager(em, sched_id=sched_id,
                                       alloc_id=alloc_id, k_nodes=k_nodes,
                                       capacity_rows=capacity_rows)
@@ -251,12 +304,16 @@ class SimState(NamedTuple):
                           .max(initial=1))
         k_nodes = max(int(k_nodes), 1)
 
-        f = cls._blank(m, n, r, k_nodes)
+        ft = getattr(em, "_fail_t", None)
+        nf = 0 if ft is None else int(ft.shape[0])
+        f = cls._blank(m, n, r, k_nodes, nf)
         cols = {c: np.zeros(m, dtype=np.int64) for c in _INT_COLS}
         for c in _INT_COLS:
             cols[c][:lim] = getattr(table, c)[:lim]
         hi = int(max(cols["submit"][live].max(initial=0), 0)
                  + max(cols["duration"][live].max(initial=0), 0))
+        if nf:
+            hi = max(hi, int(ft.max()) + int(em.quarantine_s))
         if hi >= int(INF_I) // 2:
             raise ValueError(f"timestamps too large for int32 engine ({hi})")
         f["submit"][live] = cols["submit"][live]
@@ -298,6 +355,24 @@ class SimState(NamedTuple):
         f["n_submitted"] = np.int32(em.n_submitted)
         f["n_completed"] = np.int32(em.n_completed)
         f["n_rejected"] = np.int32(em.n_rejected)
+
+        # failure schedule + node health (no-op fields when nf == 0)
+        if nf:
+            f["fail_ev"][:, 0] = ft
+            f["fail_ev"][:, 1] = em._fail_node
+            f["fail_ev"][:, 2] = em._fail_kind.astype(np.int32)
+            f["fptr"] = np.int32(em._fcursor)
+            f["n_fail"] = np.int32(nf)
+            f["node_up"] = em._node_up.astype(np.int32)
+            f["quar_until"] = np.minimum(em._quar_until,
+                                         int(INF_I)).astype(np.int32)
+            f["down_since"] = em._down_since.astype(np.int32)
+            f["quarantine_s"] = np.int32(em.quarantine_s)
+            f["ckpt_every_s"] = np.int32(
+                getattr(em._ckpt, "ckpt_every_s", 0) or 0)
+            f["n_requeued"] = np.int32(em.n_requeued)
+            f["lost_work_s"] = np.int32(em.lost_work_s)
+            f["node_downtime_s"] = np.int32(em.node_downtime_s)
 
         meta = SimMeta(
             ids=tuple(table.ids[i] if live[i] else None for i in range(m)),

@@ -139,7 +139,7 @@ def shadow_from_releases(avail: np.ndarray, head_vec: np.ndarray,
 # ----------------------------------------------------------------------
 # compiled path: one release per while-loop trip (fleet engine)
 # ----------------------------------------------------------------------
-def shadow_walk(avail, rel, assigned, req, head_req, need):
+def shadow_walk(avail, rel, assigned, req, head_req, need, node_ok=None):
     """Shadow scan as a jnp ``while_loop`` over the fleet engine's row
     arrays — semantics identical to :func:`shadow_from_releases`.
 
@@ -149,7 +149,10 @@ def shadow_walk(avail, rel, assigned, req, head_req, need):
     walk is disabled for this lane — an all-INF ``rel`` makes the loop a
     vmap-safe no-op); ``assigned int32[M, K]`` node ids padded with N;
     ``req int32[M, R]``; ``head_req int32[R]`` / ``need`` the blocked
-    head's request.
+    head's request.  ``node_ok bool[N]`` (optional) excludes ineligible
+    nodes (down/quarantined) from the fit count — the compiled twin of
+    the host walk starting from an availability floored to -1 at those
+    nodes (release deltas there are filtered host-side).
 
     Each trip releases the earliest-releasing row and, only once no
     remaining row shares that timestamp (the tie-grouping of the host
@@ -177,8 +180,10 @@ def shadow_walk(avail, rel, assigned, req, head_req, need):
         j2 = jnp.argmin(rel).astype(jnp.int32)
         t2 = rel[j2]
         group_done = t2 > t_j
-        fit_cnt = (cur >= head_req[None, :]).all(axis=1).sum(
-            dtype=jnp.int32)
+        fitn = (cur >= head_req[None, :]).all(axis=1)
+        if node_ok is not None:
+            fitn = fitn & node_ok
+        fit_cnt = fitn.sum(dtype=jnp.int32)
         hit = group_done & (fit_cnt >= need)
         return cur, rel, found | hit, jnp.where(hit, t_j, sh_t), j2, t2
 

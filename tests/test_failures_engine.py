@@ -1,0 +1,309 @@
+"""Failure-aware simulation across both engines (DESIGN.md §9).
+
+The decisive contract: a seeded node FAIL/REPAIR schedule (preempt +
+requeue victims with checkpoint credit, quarantine-masked dispatch) must
+produce BIT-IDENTICAL dispatch traces on the host event loop and the
+compiled fleet engine — pinned here for FIFO×FF and EBF×FF — and the
+``failures`` summary counters (``requeued_jobs``, ``lost_work_s``,
+``node_downtime_s``) must agree between engines, including through the
+``Experiment`` batch planner (failure scenarios must plan onto the fleet
+with zero fallback).
+
+Satellites covered alongside: ``requeue_job`` edge cases (exactly-once
+resource release, queue-ring wrap), ``FaultAwareScheduler`` quarantine
+expiry/reset semantics, and the row-view-façade hardening of
+``StragglerMonitor``/``SlowHostModel``.
+"""
+import copy
+import json
+
+import numpy as np
+import pytest
+
+from repro.cluster import FailureInjector, FaultAwareScheduler, \
+    StragglerMonitor
+from repro.cluster.elastic import SlowHostModel
+from repro.cluster.failures import CheckpointRestartPolicy
+from repro.core import EventManager, Job, JobState, ResourceManager, \
+    Simulator
+from repro.core.dispatchers import (DispatchContext, EasyBackfilling,
+                                    FirstFit, FirstInFirstOut)
+from repro.core.job import JobFactory
+from repro.experimentation import Experiment
+from repro.fleet import SCHED_EBF, SCHED_FIFO, ALLOC_FF, FleetRunner
+from repro.workloads.synthetic import SyntheticWorkload
+
+# the golden scenario of test_fleet_engine.py: 10 nodes in two groups
+SYS = {"groups": {"a": {"core": 4, "mem": 1024}, "b": {"core": 8, "mem": 2048}},
+       "nodes": {"a": 6, "b": 4}}
+N_NODES = 10
+
+SMALL = {"groups": {"g": {"core": 4}}, "nodes": {"g": 4}}
+
+
+def _workload(n=150, seed=7):
+    return SyntheticWorkload(
+        n, seed=seed, mean_interarrival_s=25.0, duration_median_s=900.0,
+        duration_sigma=1.1, node_weights={1: 0.5, 2: 0.3, 4: 0.2},
+        resources={"core": (1, 4), "mem": (64, 1024)})
+
+
+def _injector(seed=3):
+    return FailureInjector(N_NODES, mtbf_s=4000.0, repair_s=900.0,
+                           horizon_s=6000, seed=seed)
+
+
+def _host_run(scheduler, tmp_path, n=150, seed=7, name="host"):
+    sim = Simulator(_workload(n, seed), SYS, scheduler,
+                    job_factory=JobFactory(), output_dir=str(tmp_path),
+                    name=name, failures=_injector(),
+                    checkpoint=CheckpointRestartPolicy(600),
+                    quarantine_s=1800)
+    out = sim.start_simulation()
+    trace = {}
+    with open(out) as fh:
+        for line in fh:
+            r = json.loads(line)
+            trace[str(r["id"])] = [r["start"], list(r["assigned"]),
+                                   r["state"]]
+    return trace, sim.summary
+
+
+def _job(jid, submit, duration, cores=4, nodes=1, expected=None):
+    return Job(id=jid, user_id=0, submission_time=submit, duration=duration,
+               expected_duration=duration if expected is None else expected,
+               requested_nodes=nodes, requested_resources={"core": cores})
+
+
+# ----------------------------------------------------------------------
+# tentpole: host failure semantics + host/fleet golden equality
+# ----------------------------------------------------------------------
+def test_host_failures_requeue_and_account(tmp_path):
+    """Failures preempt victims, requeue them with checkpoint credit, and
+    the run still terminates with every job accounted for."""
+    _, summary = _host_run(FirstInFirstOut(FirstFit()), tmp_path)
+    assert summary["submitted"] == 150
+    assert summary["completed"] + summary["rejected"] == 150
+    f = summary["failures"]
+    assert f["requeued_jobs"] > 0
+    assert f["lost_work_s"] >= 0
+    assert f["node_downtime_s"] > 0
+
+
+@pytest.mark.parametrize("tag,sched,sc", [
+    ("FIFO-FF", lambda: FirstInFirstOut(FirstFit()), SCHED_FIFO),
+    ("EBF-FF", lambda: EasyBackfilling(FirstFit()), SCHED_EBF),
+])
+def test_fleet_matches_host_under_failures(tag, sched, sc, tmp_path):
+    """Golden equality: same seeded failure schedule, bit-identical
+    dispatch trace AND equal failure counters on both engines."""
+    want, host_summary = _host_run(sched(), tmp_path, name=tag)
+    res = FleetRunner().run([FleetRunner.build(
+        tag, _workload(), SYS, sc, alloc_id=ALLOC_FF,
+        job_factory=JobFactory(), failures=_injector(),
+        quarantine_s=1800, ckpt_every_s=600)])
+    got = res.trace(0)
+    assert set(got) == set(want), f"{tag}: job id set diverged"
+    diff = {jid: (want[jid], got[jid]) for jid in want
+            if want[jid] != got[jid]}
+    assert not diff, f"{tag}: {len(diff)} jobs diverged, e.g. " \
+        f"{dict(list(diff.items())[:3])}"
+    assert host_summary["failures"]["requeued_jobs"] > 0
+    assert dict(res.summary(0)["failures"]) == \
+        dict(host_summary["failures"])
+
+
+def test_failure_lane_padding_is_inert(tmp_path):
+    """A failure-bearing lane vmapped next to a failure-free lane (the
+    failure-free SimState pads its [F,3] schedule with INF rows) must
+    not change either lane's decisions vs solo launches.
+
+    (The clean lane reuses the 150-job workload size on purpose: the
+    process-wide compile cache is keyed on bucketed shapes, and
+    test_fleet_engine.py::test_compile_cache_reuses_executable asserts
+    a cold 100-job bucket — this test must not pre-warm it.)"""
+    mixed = FleetRunner().run([
+        FleetRunner.build("fail", _workload(), SYS, SCHED_FIFO,
+                          alloc_id=ALLOC_FF, job_factory=JobFactory(),
+                          failures=_injector(), quarantine_s=1800,
+                          ckpt_every_s=600),
+        FleetRunner.build("clean", _workload(150, 3), SYS, SCHED_FIFO,
+                          alloc_id=ALLOC_FF, job_factory=JobFactory()),
+    ], group_by_cost=False)
+    solo_fail = FleetRunner().run([FleetRunner.build(
+        "fail", _workload(), SYS, SCHED_FIFO, alloc_id=ALLOC_FF,
+        job_factory=JobFactory(), failures=_injector(), quarantine_s=1800,
+        ckpt_every_s=600)])
+    solo_clean = FleetRunner().run([FleetRunner.build(
+        "clean", _workload(150, 3), SYS, SCHED_FIFO, alloc_id=ALLOC_FF,
+        job_factory=JobFactory())])
+    assert mixed.trace(0) == solo_fail.trace(0)
+    assert mixed.trace(1) == solo_clean.trace(0)
+    assert "failures" not in mixed.summary(1)   # padded lane stays clean
+
+
+# ----------------------------------------------------------------------
+# satellite: Experiment planner — failure scenarios stay on the fleet
+# ----------------------------------------------------------------------
+def test_experiment_failure_summaries_fleet_vs_host(tmp_path):
+    def run(use_fleet, sub):
+        exp = Experiment(
+            f"fail-{sub}", _workload(), SYS,
+            output_dir=str(tmp_path / sub), use_fleet=use_fleet,
+            job_factory=JobFactory(), failures=_injector(),
+            checkpoint=CheckpointRestartPolicy(600), quarantine_s=1800)
+        exp.gen_dispatchers([FirstInFirstOut], [FirstFit])
+        results = exp.run_simulation(produce_plots=False)
+        (name,) = results
+        return results[name]["summaries"][0]
+
+    fleet = run(True, "fleet")
+    host = run(False, "host")
+    # zero fallback: the failure-bearing row plans onto the fleet
+    assert fleet["engine"] == "fleet"
+    assert fleet["fallback_reason"] is None
+    assert host["engine"] == "host"
+    assert fleet["failures"]["requeued_jobs"] > 0
+    assert dict(fleet["failures"]) == dict(host["failures"])
+
+
+# ----------------------------------------------------------------------
+# satellite: requeue_job edge cases
+# ----------------------------------------------------------------------
+def test_requeue_releases_resources_exactly_once():
+    rm = ResourceManager(SMALL)
+    a = _job("a", 0, 100, cores=4, nodes=2)
+    em = EventManager(iter([a]), rm)
+    em.advance_to(0)
+    em.start_job(a, [0, 1])
+    assert not np.all(rm.available == rm.capacity)
+    em.advance_to(10)
+    em.requeue_job(a)
+    # released exactly once: availability back to full, state reset
+    assert np.all(rm.available == rm.capacity)
+    assert a.state == JobState.QUEUED
+    assert a.start_time is None and a.end_time is None
+    assert a.assigned_nodes == []
+    assert list(em.queue_rows()) == [a._row]
+    with pytest.raises(ValueError):        # no longer running -> no-go
+        em.requeue_job(a)
+    assert np.all(rm.available == rm.capacity)
+    # the cancelled completion event must NOT fire at the old end time
+    em.start_job(a, [2, 3])                # restart at t=10 -> ends 110
+    completed, _ = em.advance_to(100)      # old end (0+100) is dead
+    assert completed == []
+    assert a.state == JobState.RUNNING
+    completed, _ = em.advance_to(110)
+    assert len(completed) == 1
+    assert em.n_completed == 1
+    assert np.all(rm.available == rm.capacity)
+
+
+def test_requeue_survives_queue_ring_wrap():
+    """Repeated start-head/requeue cycles through a tiny ring buffer force
+    tombstone compaction AND buffer growth; the row->pos map and FIFO
+    order must stay consistent throughout."""
+    rm = ResourceManager({"groups": {"g": {"core": 1}}, "nodes": {"g": 1}})
+    jobs = [_job(str(i), 0, 50, cores=1, nodes=1) for i in range(3)]
+    em = EventManager(iter(jobs), rm)
+    em._qbuf = np.empty(4, dtype=np.int64)       # shrink the ring
+    em._qlive = np.zeros(4, dtype=bool)
+    em.advance_to(0)
+    expected = [str(i) for i in range(3)]
+    for _ in range(12):
+        rows = em.queue_rows()
+        assert [em.table.ids[int(r)] for r in rows] == expected
+        assert len(em._qpos) == len(rows)
+        for row, pos in em._qpos.items():
+            assert int(em._qbuf[pos]) == row and bool(em._qlive[pos])
+        head = int(rows[0])
+        em.start_row(head, [0])
+        em.requeue_job(em.table.view(head))      # re-enters at the tail
+        expected = expected[1:] + [expected[0]]
+    assert np.all(rm.available == rm.capacity)
+
+
+# ----------------------------------------------------------------------
+# satellite: FaultAwareScheduler quarantine lifecycle
+# ----------------------------------------------------------------------
+def test_fault_aware_quarantine_expiry_readmits():
+    rm = ResourceManager({"groups": {"g": {"core": 4}}, "nodes": {"g": 2}})
+    a = _job("a", 0, 10, cores=4, nodes=1)
+    em = EventManager(iter([a]), rm)
+    em.advance_to(0)
+    sched = FaultAwareScheduler(FirstInFirstOut(FirstFit()),
+                                quarantine_s=100)
+    sched.note_failure(0, 0)
+    sched.note_failure(0, 1)
+    assert sorted(sched.quarantined(0)) == [0, 1]
+    plan = sched.plan(DispatchContext.from_event_manager(0, em))
+    assert plan.n_started == 0             # every node quarantined
+    em.advance_to(150)                     # both windows expired
+    assert sched.quarantined(150) == []
+    plan = sched.plan(DispatchContext.from_event_manager(150, em))
+    assert plan.n_started == 1             # nodes re-admitted
+
+
+def test_fault_aware_reset_clears_state_across_repeats():
+    """Experiment repeats deepcopy + reset() the scheduler; quarantine
+    memory must not leak into the fresh repeat (nor reset() leak back)."""
+    sched = FaultAwareScheduler(FirstInFirstOut(FirstFit()),
+                                quarantine_s=1000)
+    sched.note_failure(5, 0)
+    rep = copy.deepcopy(sched)
+    rep.reset()
+    assert rep.quarantined(6) == []
+    assert sched.quarantined(6) == [0]     # the original is untouched
+
+
+# ----------------------------------------------------------------------
+# satellite: StragglerMonitor / SlowHostModel on row-view façades
+# ----------------------------------------------------------------------
+def test_straggler_monitor_on_live_and_recycled_rows():
+    """Wired directly as the on_complete hook the monitor sees BOUND
+    façades; the rows are recycled right after, so held references turn
+    detached — re-observing them must read the snapshotted final values
+    instead of raising."""
+    rm = ResourceManager({"groups": {"g": {"core": 4}}, "nodes": {"g": 2}})
+    mon = StragglerMonitor(slow_threshold=1.2, min_samples=1)
+    seen = []
+
+    def hook(job):
+        mon.observe(job)                   # 1-arg wiring: uses estimate
+        seen.append(job)
+
+    slow = _job("slow", 0, 150, cores=4, nodes=1, expected=100)
+    ok = _job("ok", 0, 100, cores=4, nodes=1, expected=100)
+    em = EventManager(iter([slow, ok]), rm, on_complete=hook)
+    em.advance_to(0)
+    em.start_job(slow, [0])
+    em.start_job(ok, [1])
+    em.advance_to(200)
+    assert len(seen) == 2
+    assert all(not j.bound for j in seen)  # rows recycled -> detached
+    for j in seen:                         # detached reads: must not raise
+        mon.observe(j)
+        assert j.assigned_nodes            # snapshot kept the node list
+    assert mon.stragglers() == [0]
+
+
+def test_straggler_monitor_skips_restarted_jobs():
+    """A failure-requeued job reruns a checkpoint-credited remainder on
+    different nodes — not a valid host-speed sample."""
+    mon = StragglerMonitor(min_samples=1)
+    j = _job("r", 0, 100)
+    j.start_time, j.end_time = 0, 100
+    j.assigned_nodes = [2]
+    j.attrs["restarts"] = 1
+    mon.observe(j)
+    assert not mon.host_ratio
+
+
+def test_slow_host_model_defaults_to_assigned_nodes():
+    model = SlowHostModel({3: 1.5})
+    j = _job("s", 0, 100)
+    j.assigned_nodes = [3]
+    assert model.effective_duration(j) == 150     # detached façade read
+    assert model.effective_duration(j, [7]) == 100
+    j.assigned_nodes = []                          # requeued-then-rejected
+    assert model.effective_duration(j) == 100

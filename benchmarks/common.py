@@ -54,10 +54,17 @@ def bench_metadata() -> Dict[str, object]:
     """Environment stamp written as ``result["env"]`` into every
     BENCH_*.json — perf numbers are meaningless without the jax
     version/backend/device they were measured on."""
+    from repro.utils import cpu_time_s, peak_rss_mb
+
     meta: Dict[str, object] = {
         "python": platform.python_version(),
         "platform": platform.platform(),
         "bench_scale": SCALE,
+        # stamped at write time: the process's kernel-tracked memory
+        # high-water mark and total CPU seconds, so every BENCH_*.json
+        # records what the measured run actually cost the machine
+        "peak_rss_mb": round(peak_rss_mb(), 1),
+        "cpu_time_s": round(cpu_time_s(), 2),
     }
     try:
         import jax

@@ -40,7 +40,21 @@ def main() -> None:
                     help="failure-aware simulation: host scale cell + "
                          "host-vs-fleet crosscheck -> BENCH_failures.json "
                          "(with --quick: CI smoke)")
+    ap.add_argument("--profile", action="store_true",
+                    help="telemetry overhead + per-phase trip profile of "
+                         "the fleet grid -> BENCH_profile.json + "
+                         "profile_report.txt (fails on >15% events/s "
+                         "regression; with --quick: CI smoke)")
     args = ap.parse_args()
+    if args.profile:
+        from . import bench_profile
+        print("name,us_per_call,derived")
+        result = bench_profile.run(args.out, quick=args.quick)
+        print(f"# profile {result['n_sims']} sims: telemetry overhead "
+              f"{result['overhead_fraction']:.1%} "
+              f"(budget {result['max_overhead_fraction']:.0%})",
+              file=sys.stderr)
+        return
     if args.failures:
         from . import bench_failures
         print("name,us_per_call,derived")

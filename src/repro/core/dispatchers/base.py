@@ -199,6 +199,11 @@ class SchedulerBase(abc.ABC):
         res = self.allocator.allocate_batch(ctx, order, blocking=blocking)
         skips = LazySkips()
         plan = DispatchPlan(skips=skips)
+        # telemetry phase counter (DESIGN.md §10): allocation probes this
+        # round — starts plus the one blocked probe when a prefix stopped
+        # (len(res) includes the recorded failure); matches the compiled
+        # engine's greedy-loop trip count exactly
+        plan.stats["phase_counters"] = {"dispatch_trips": len(res)}
         for qi, nodes in res:
             if nodes is None:
                 skips[ctx.job_id(qi)] = "no-fit"

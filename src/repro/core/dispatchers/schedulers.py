@@ -91,6 +91,11 @@ class EasyBackfilling(SchedulerBase):
             avail[nodes] -= ctx.req[i][None, :]
             plan.starts.append((ctx.job(i), [int(n) for n in nodes]))
             i += 1
+        # telemetry phase counters (DESIGN.md §10); the compiled engine
+        # derives the same values post-loop from its carried scalars
+        stats = {"dispatch_trips": i + (1 if i < j_total else 0),
+                 "shadow_trips": 0, "backfill_admits": 0, "misfit_skips": 0}
+        plan.stats["phase_counters"] = stats
         if i >= j_total:
             return plan
 
@@ -107,9 +112,15 @@ class EasyBackfilling(SchedulerBase):
         if shadow_time is None:
             # head never fits even with everything released — should have
             # been rejected at submission; be conservative: no backfilling.
+            stats["shadow_trips"] = len(releases)
+            stats["misfit_skips"] = j_total - head - 1
             for qi in range(head + 1, j_total):
                 plan.skips[ctx.job_id(qi)] = "no-shadow"
             return plan
+        # release events consumed by the walk: every tuple at or before
+        # the shadow instant (whole tie group applied before the fit test)
+        stats["shadow_trips"] = sum(1 for r in releases
+                                    if r[0] <= shadow_time)
         head_nodes = find(head, shadow_avail)
         assert head_nodes is not None
         extra = shadow_avail.copy()
@@ -135,6 +146,9 @@ class EasyBackfilling(SchedulerBase):
                 avail[nodes] -= ctx.req[qi][None, :]
                 extra[nodes] -= ctx.req[qi][None, :]
             plan.starts.append((ctx.job(qi), [int(n) for n in nodes]))
+        admits = len(plan.starts) - head
+        stats["backfill_admits"] = admits
+        stats["misfit_skips"] = (j_total - head - 1) - admits
         return plan
 
     # ------------------------------------------------------------------

@@ -54,6 +54,10 @@ class EventManager:
     n_requeued: int = 0
     lost_work_s: int = 0
     node_downtime_s: int = 0
+    # telemetry phase counter (DESIGN.md §10): schedule entries consumed
+    # by ``_process_failures`` — no-op duplicates included, matching the
+    # fleet engine's failure-drain pointer delta
+    n_fail_drain_trips: int = 0
 
     def __init__(
         self,
@@ -147,6 +151,7 @@ class EventManager:
         self.n_requeued = 0
         self.lost_work_s = 0
         self.node_downtime_s = 0
+        self.n_fail_drain_trips = 0
         # per-row last-enqueue stamps: victims re-enter the FIFO ring in
         # their previous enqueue order (the fleet engine re-ranks by old
         # fifo_rank — same relative order)
@@ -172,6 +177,7 @@ class EventManager:
                 fail_t[self._fcursor] <= t:
             i = self._fcursor
             self._fcursor += 1
+            self.n_fail_drain_trips += 1
             ev_t = int(fail_t[i])
             v = int(fail_node[i])
             if fail_kind[i]:                 # ---- FAIL

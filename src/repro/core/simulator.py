@@ -72,6 +72,7 @@ class Simulator:
         failures=None,
         checkpoint=None,
         quarantine_s: int = 0,
+        telemetry_stride: int = 0,
     ) -> None:
         """``failures`` (a ``FailureInjector`` or its ``(times, nodes,
         is_fail)`` arrays) installs a native node FAIL/REPAIR event
@@ -79,7 +80,14 @@ class Simulator:
         requeue victims, ``checkpoint`` (a ``CheckpointRestartPolicy``)
         decides the remaining duration, and failed/quarantined nodes are
         masked out of every dispatcher's context for ``quarantine_s``
-        seconds after each failure."""
+        seconds after each failure.
+
+        ``telemetry_stride`` > 0 turns on the unified telemetry layer
+        (DESIGN.md §10): one telemetry-schema sample every ``stride``
+        events plus per-phase dispatch counters, decoded into
+        ``self.telemetry`` (a :class:`~repro.telemetry.TelemetryTrace`),
+        summarized under ``summary["telemetry"]`` and written to
+        ``{name}-telemetry.jsonl``."""
         if isinstance(sys_config, str):
             with open(sys_config) as fh:
                 sys_config = json.load(fh)
@@ -98,6 +106,8 @@ class Simulator:
         self.failures = failures
         self.checkpoint = checkpoint
         self.quarantine_s = quarantine_s
+        self.telemetry_stride = int(telemetry_stride)
+        self.telemetry = None
 
     # ------------------------------------------------------------------
     def _row_iterator(self, table: JobTable) -> Iterator:
@@ -160,8 +170,14 @@ class Simulator:
         self.event_manager = em
 
         status = SystemStatus() if system_status else None
-        util = UtilizationMonitor() if system_utilization else None
+        util = None
+        if system_utilization or self.telemetry_stride > 0:
+            util = UtilizationMonitor(
+                sample_every=self.telemetry_stride or 1)
         self.utilization_monitor = util
+        # per-phase dispatch counters (telemetry layer, DESIGN.md §10)
+        phase_totals: Optional[Dict[str, int]] = \
+            {} if self.telemetry_stride > 0 else None
         adata = additional_data or []
         for ad in adata:
             if isinstance(ad, NodeFailureModel):
@@ -226,6 +242,10 @@ class Simulator:
                     em.reject_job(job)
                 dt_launches = int(plan.stats.get("kernel_launches", 0))
                 kernel_launches_total += dt_launches
+                if phase_totals is not None:
+                    for k, v in plan.stats.get(
+                            "phase_counters", {}).items():
+                        phase_totals[k] = phase_totals.get(k, 0) + int(v)
                 n_dispatch_events += 1
                 dt_dispatch = time.perf_counter() - d0
                 dispatch_total += dt_dispatch
@@ -251,6 +271,11 @@ class Simulator:
             if max_events is not None and n_events >= max_events:
                 break
 
+        if util is not None:
+            # end-of-sim sample (after livelock rejections, matching the
+            # fleet engine's post-loop ordering)
+            util.finalize(em)
+
         cpu_total = time.process_time() - t_start
         self.summary = {
             "dispatcher": self.dispatcher.name,
@@ -275,6 +300,24 @@ class Simulator:
                 "lost_work_s": em.lost_work_s,
                 "node_downtime_s": em.node_downtime_s,
             }
+        if phase_totals is not None:
+            phase_totals["fail_drain_trips"] = \
+                phase_totals.get("fail_drain_trips", 0) + \
+                int(getattr(em, "n_fail_drain_trips", 0))
+            cap = self.rm.capacity.sum(axis=0)
+            self.telemetry = util.to_trace(
+                self.name, self.rm.resource_types,
+                {rt: int(cap[i])
+                 for i, rt in enumerate(self.rm.resource_types)},
+                phase_counters=phase_totals)
+            self.summary["telemetry"] = {
+                "stride": self.telemetry.stride,
+                "n_samples": self.telemetry.n_samples,
+                "phase_counters": dict(self.telemetry.phase_counters),
+            }
+            if write_output:
+                self.telemetry.write_jsonl(os.path.join(
+                    self.output_dir, f"{self.name}-telemetry.jsonl"))
         if write_output:
             out_fh.close()
             bench_fh.write(_dumps({"summary": self.summary}) + b"\n")

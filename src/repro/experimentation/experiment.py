@@ -36,7 +36,8 @@ from ..core.dispatchers.base import AllocatorBase, SchedulerBase
 from ..core.resources import ResourceManager
 from ..core.simulator import Simulator, default_job_factory
 from ..workloads.synthetic import SyntheticWorkload
-from .plot_factory import (DECISION_PLOTS, PERFORMANCE_PLOTS, PlotFactory)
+from .plot_factory import (DECISION_PLOTS, PERFORMANCE_PLOTS,
+                           TELEMETRY_PLOTS, PlotFactory)
 
 
 class Experiment:
@@ -87,10 +88,11 @@ class Experiment:
             return "custom-start-kwargs"
         if not isinstance(self.workload, (SyntheticWorkload, list, tuple)):
             return "host-only-workload"
-        # failure scenarios lower onto the compiled engine (DESIGN.md §9)
+        # failure scenarios lower onto the compiled engine (DESIGN.md §9),
+        # telemetry lowers onto the device-resident buffers (§10)
         extra = set(self.sim_kwargs) - {"job_factory", "lookahead_jobs",
                                         "failures", "checkpoint",
-                                        "quarantine_s"}
+                                        "quarantine_s", "telemetry_stride"}
         if extra:
             return "host-only-sim-kwargs:" + ",".join(sorted(extra))
         from ..fleet.engine import compiles
@@ -113,6 +115,7 @@ class Experiment:
         quarantine_s = int(self.sim_kwargs.get("quarantine_s", 0))
         ckpt_every_s = int(getattr(self.sim_kwargs.get("checkpoint"),
                                    "ckpt_every_s", 0) or 0)
+        telemetry_stride = int(self.sim_kwargs.get("telemetry_stride", 0))
 
         runner = FleetRunner()
         sims, keys = [], []
@@ -125,7 +128,8 @@ class Experiment:
                     self._rep_name(name, rep), workload, self.sys_config,
                     s_code, alloc_id=a_code, job_factory=factory,
                     seed=seed, failures=failures,
-                    quarantine_s=quarantine_s, ckpt_every_s=ckpt_every_s))
+                    quarantine_s=quarantine_s, ckpt_every_s=ckpt_every_s,
+                    telemetry_stride=telemetry_stride))
                 keys.append((name, rep))
         result = runner.run(sims)
 
@@ -208,4 +212,9 @@ class Experiment:
             pf2.set_files(outputs, labels, benches)
             for kind in PERFORMANCE_PLOTS:
                 pf2.produce_plot(kind)
+            if int(self.sim_kwargs.get("telemetry_stride", 0)) > 0:
+                pf3 = PlotFactory("telemetry", self.sys_config)
+                pf3.set_files(outputs, labels, benches)
+                for kind in TELEMETRY_PLOTS:
+                    pf3.produce_plot(kind)
         return self.results

@@ -56,6 +56,24 @@ def bench_series(bench_path: str) -> Dict[str, List[float]]:
             "dispatch_s": dispatch_s, "rss_mb": rss, "summary": summary}
 
 
+def telemetry_series(telemetry_path: str) -> Dict[str, object]:
+    """Decode a ``{name}-telemetry.jsonl`` structured trace (either
+    engine) into plottable series: sample columns as lists, per-type
+    utilization fractions, plus the header's phase counters."""
+    from ..telemetry import TelemetryTrace
+
+    trace = TelemetryTrace.read_jsonl(telemetry_path)
+    out: Dict[str, object] = {
+        c: trace.column(c).tolist() for c in trace.columns}
+    out["utilization"] = {rt: trace.utilization(rt).tolist()
+                          for rt in trace.resource_types}
+    out["phase_counters"] = dict(trace.phase_counters)
+    out["stride"] = trace.stride
+    out["engine"] = trace.engine
+    out["truncated"] = trace.truncated
+    return out
+
+
 def dispatch_time_by_queue_size(bench_path: str, bucket: int = 10
                                 ) -> List[Tuple[int, float, int]]:
     """[(queue_bucket, mean dispatch seconds, count)] — paper Fig. 13."""

@@ -7,6 +7,9 @@
 Plot types:
   decision-related:    slowdown | queue_size | waiting_time | utilization
   performance-related: dispatch_time | dispatch_vs_queue | memory
+  telemetry-related:   telemetry_utilization | telemetry_queue
+                       (the DESIGN.md §10 structured traces — identical
+                       series whichever engine produced the JSONL)
 
 Headless (Agg) — each call writes a PNG next to the first input file.
 """
@@ -23,6 +26,7 @@ from . import metrics
 
 DECISION_PLOTS = ("slowdown", "queue_size", "waiting_time", "utilization")
 PERFORMANCE_PLOTS = ("dispatch_time", "dispatch_vs_queue", "memory")
+TELEMETRY_PLOTS = ("telemetry_utilization", "telemetry_queue")
 
 
 def utilization_heatmap(output_path: str, n_nodes: int, out_png: str,
@@ -64,26 +68,32 @@ def utilization_heatmap(output_path: str, n_nodes: int, out_png: str,
 class PlotFactory:
     def __init__(self, plot_group: str = "decision",
                  sys_config: Optional[Dict] = None) -> None:
-        if plot_group not in ("decision", "performance"):
+        if plot_group not in ("decision", "performance", "telemetry"):
             raise ValueError(plot_group)
         self.plot_group = plot_group
         self.sys_config = sys_config
         self.files: List[str] = []
         self.bench_files: List[str] = []
+        self.telemetry_files: List[str] = []
         self.labels: List[str] = []
 
     def set_files(self, files: List[str], labels: List[str],
-                  bench_files: Optional[List[str]] = None) -> None:
+                  bench_files: Optional[List[str]] = None,
+                  telemetry_files: Optional[List[str]] = None) -> None:
         self.files = list(files)
         self.labels = list(labels)
         self.bench_files = list(bench_files or
                                 [f.replace("-output.jsonl", "-bench.jsonl")
                                  for f in files])
+        self.telemetry_files = list(
+            telemetry_files or
+            [f.replace("-output.jsonl", "-telemetry.jsonl") for f in files])
 
     # ------------------------------------------------------------------
     def produce_plot(self, kind: str, out_path: Optional[str] = None) -> str:
-        allowed = (DECISION_PLOTS if self.plot_group == "decision"
-                   else PERFORMANCE_PLOTS)
+        allowed = {"decision": DECISION_PLOTS,
+                   "performance": PERFORMANCE_PLOTS,
+                   "telemetry": TELEMETRY_PLOTS}[self.plot_group]
         if kind not in allowed:
             raise ValueError(f"{kind!r} not in {allowed} for group "
                              f"{self.plot_group!r}")
@@ -127,6 +137,23 @@ class PlotFactory:
                 ax.plot(s["t"], s["rss_mb"], label=lab, linewidth=0.8)
             ax.set_xlabel("simulation time (s)")
             ax.set_ylabel("RSS (MB)")
+            ax.legend(fontsize=7)
+        elif kind == "telemetry_utilization":
+            for tf, lab in zip(self.telemetry_files, self.labels):
+                s = metrics.telemetry_series(tf)
+                for rt, util in sorted(s["utilization"].items()):
+                    ax.plot(s["t"], util, label=f"{lab}:{rt}",
+                            linewidth=0.8)
+            ax.set_xlabel("simulation time (s)")
+            ax.set_ylabel("utilized fraction")
+            ax.set_ylim(0.0, 1.05)
+            ax.legend(fontsize=7)
+        elif kind == "telemetry_queue":
+            for tf, lab in zip(self.telemetry_files, self.labels):
+                s = metrics.telemetry_series(tf)
+                ax.plot(s["t"], s["queue"], label=lab, linewidth=0.8)
+            ax.set_xlabel("simulation time (s)")
+            ax.set_ylabel("queued jobs")
             ax.legend(fontsize=7)
         ax.set_title(kind)
         plt.xticks(rotation=30, fontsize=7)

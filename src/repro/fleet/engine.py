@@ -218,7 +218,7 @@ def _select_nodes(alloc_id, pool, capacity, reqv, need, k_cap, pref,
 
 
 def _dispatch_round(s: SimState, state, start, end, assigned, avail, t,
-                    fit_round, pri, q0, elig=None):
+                    fit_round, pri, q0, elig=None, collect_stats=False):
     """One full dispatch round at event time ``t``, in three phases.
 
     **Greedy loop** — select the highest-priority queued job, probe the
@@ -251,6 +251,13 @@ def _dispatch_round(s: SimState, state, start, end, assigned, avail, t,
     number of jobs started this event.  ``elig`` (bool[N] or None) is
     the failure-aware node-eligibility mask, threaded through every
     allocator probe, both bulk fit counts, and the shadow walk.
+
+    ``collect_stats`` (STATIC — telemetry-off compiles it away) appends
+    the per-event phase counters ``(dispatch_trips, shadow_trips,
+    backfill_admits, misfit_skips)`` to the return tuple, all derived
+    post-loop from carried scalars so the hot inner loops stay
+    untouched; the host planners count the same quantities
+    (DESIGN.md §10).
     """
     k_cap = assigned.shape[1]
     is_ebf = s.sched_id == SCHED_EBF
@@ -387,7 +394,30 @@ def _dispatch_round(s: SimState, state, start, end, assigned, avail, t,
         cond, b_body,
         (state, start, end, assigned, avail, extra, n_started,
          started_evt, cursor0, go0))
-    return out[:5] + out[6:8]
+    if not collect_stats:
+        return out[:5] + out[6:8]
+    # phase counters, all from already-carried scalars (DESIGN.md §10).
+    # ``started_evt``/``q_cnt`` hold the PHASE-1 values here (the
+    # backfill loop's totals live in ``out``):
+    #   dispatch_trips  = greedy probes = starts + the one blocked probe
+    #   shadow_trips    = releases consumed by the walk (every release at
+    #                     or before the shadow instant; ALL of them when
+    #                     the head never fits — the host's no-shadow case)
+    #   backfill_admits = phase-3 starts
+    #   misfit_skips    = backfill candidates behind the head that did
+    #                     not start (no-fit + would-delay-head)
+    disp_trips = started_evt + (q_cnt > 0).astype(jnp.int32)
+    sh_trips = jnp.where(
+        has_head,
+        jnp.where(found,
+                  ((rel <= shadow_t) & (rel < INF_I)).sum(dtype=jnp.int32),
+                  (rel < INF_I).sum(dtype=jnp.int32)),
+        0).astype(jnp.int32)
+    bf_admits = out[7] - started_evt
+    misfit = jnp.where(has_head, (q0 - started_evt - 1) - bf_admits,
+                       0).astype(jnp.int32)
+    return out[:5] + out[6:8] + ((disp_trips, sh_trips, bf_admits,
+                                  misfit),)
 
 
 def _advance_impl(s: SimState, use_kernel: bool, interpret: bool) -> SimState:
@@ -399,6 +429,11 @@ def _advance_impl(s: SimState, use_kernel: bool, interpret: bool) -> SimState:
     # static switch: F == 0 compiles the exact pre-failure engine — all
     # failure machinery below vanishes at trace time
     has_fail = f_cap > 0
+    # static switch: S == 0 compiles the exact pre-telemetry engine —
+    # sampling, phase-counter accumulation and the dispatch round's
+    # stats arm all vanish at trace time (DESIGN.md §10)
+    tele_cap = s.tele_buf.shape[0]
+    has_tele = tele_cap > 0
     # runaway guard: without failures every iteration admits or retires
     # one of <= 2M job events; a failure schedule adds F event times plus
     # at most one extra completion per (victim, FAIL event) requeue pair.
@@ -612,10 +647,11 @@ def _advance_impl(s: SimState, use_kernel: bool, interpret: bool) -> SimState:
                 avail, s.capacity, s1.req, interpret=interpret)
         else:
             fit_round = None
-        (state, start, end, assigned, avail, n_started,
-         started_evt) = _dispatch_round(
+        res = _dispatch_round(
             s1, state, s1.start, s1.end, s1.assigned, avail, t, fit_round,
-            pri, q0, elig)
+            pri, q0, elig, collect_stats=has_tele)
+        (state, start, end, assigned, avail, n_started,
+         started_evt) = res[:7]
         n_rounds = s.n_rounds + any_queued.astype(jnp.int32)
 
         # ---- per-event log (host bench-line schema) -------------------
@@ -625,7 +661,7 @@ def _advance_impl(s: SimState, use_kernel: bool, interpret: bool) -> SimState:
         log_running = s.log_running.at[i].set(n_started - n_completed)
         log_started = s.log_started.at[i].set(started_evt)
 
-        return s._replace(
+        new = s._replace(
             state=state, queued_time=queued_time, start=start, end=end,
             fifo_rank=fifo_rank, assigned=assigned, avail=avail,
             ptr=ptr, now=t, rank_ctr=rank_ctr,
@@ -635,6 +671,32 @@ def _advance_impl(s: SimState, use_kernel: bool, interpret: bool) -> SimState:
             steps=s.steps + 1,
             log_t=log_t, log_queue=log_queue, log_running=log_running,
             log_started=log_started)
+
+        if has_tele:
+            # ---- telemetry sample + phase counters (DESIGN.md §10) ----
+            # 0-based event index % stride == 0 — the FIRST event is
+            # always recorded, matching the host monitor.  stride == 0
+            # keeps a telemetry-off sim inert inside a telemetry-on
+            # batch; a full buffer stops writing (decoded as truncated).
+            # ``s.n_requeued`` is post-failure-drain (s was rebound).
+            disp, sh, bf, mis = res[7]
+            stride = s.tele_stride
+            do = (stride > 0) & (s.tele_n < tele_cap) & \
+                (s.n_events % jnp.maximum(stride, 1) == 0)
+            row = jnp.concatenate([
+                jnp.stack([t, q0 - started_evt, n_started - n_completed,
+                           n_started + s.n_requeued, s.n_requeued]),
+                avail.sum(axis=0)]).astype(jnp.int32)
+            j = jnp.clip(s.tele_n, 0, tele_cap - 1)
+            new = new._replace(
+                tele_buf=s.tele_buf.at[j].set(
+                    jnp.where(do, row, s.tele_buf[j])),
+                tele_n=s.tele_n + do.astype(jnp.int32),
+                ct_disp_trips=s.ct_disp_trips + disp,
+                ct_shadow_trips=s.ct_shadow_trips + sh,
+                ct_backfill=s.ct_backfill + bf,
+                ct_misfit=s.ct_misfit + mis)
+        return new
 
     out = lax.while_loop(cond, body, s)
     if has_fail:
@@ -647,6 +709,25 @@ def _advance_impl(s: SimState, use_kernel: bool, interpret: bool) -> SimState:
             state=jnp.where(leftover, REJECTED,
                             out.state).astype(jnp.int32),
             n_rejected=out.n_rejected + leftover.sum(dtype=jnp.int32))
+    if has_tele:
+        # end-of-sim sample when the last event missed the stride —
+        # AFTER the livelock rejection above, exactly where the host
+        # monitor's finalize() runs, so both engines close the series
+        # on the same post-rejection counts
+        stride = out.tele_stride
+        need = (stride > 0) & (out.n_events > 0) & \
+            (out.tele_n < tele_cap) & \
+            ((out.n_events - 1) % jnp.maximum(stride, 1) != 0)
+        queue_now = out.n_submitted - out.n_rejected - out.n_started
+        row = jnp.concatenate([
+            jnp.stack([out.now, queue_now, out.n_started - out.n_completed,
+                       out.n_started + out.n_requeued, out.n_requeued]),
+            out.avail.sum(axis=0)]).astype(jnp.int32)
+        j = jnp.clip(out.tele_n, 0, tele_cap - 1)
+        out = out._replace(
+            tele_buf=out.tele_buf.at[j].set(
+                jnp.where(need, row, out.tele_buf[j])),
+            tele_n=out.tele_n + need.astype(jnp.int32))
     return out
 
 

@@ -111,9 +111,54 @@ class FleetResult:
                 "lost_work_s": int(f.lost_work_s),
                 "node_downtime_s": int(f.node_downtime_s),
             }
+        tele = self.telemetry(i)
+        if tele is not None:
+            out["telemetry"] = {
+                "stride": tele.stride,
+                "n_samples": tele.n_samples,
+                "phase_counters": dict(tele.phase_counters),
+            }
         if sim.seed is not None:
             out["seed"] = sim.seed
         return out
+
+    # ------------------------------------------------------------------
+    def telemetry(self, i: int):
+        """Decode sim ``i``'s device-resident telemetry buffers into the
+        engine-neutral :class:`~repro.telemetry.TelemetryTrace`, or None
+        when the lane ran without telemetry (S=0 or stride 0).
+
+        ``fail_drain_trips`` is the failure-cursor delta between the
+        initial and final states (the cursor advances exactly once per
+        drain-loop trip, matching ``EventManager.n_fail_drain_trips``)."""
+        f, sim = self.finals[i], self.sims[i]
+        cap_s = int(f.tele_buf.shape[0])
+        stride = int(f.tele_stride)
+        if cap_s == 0 or stride <= 0:
+            return None
+        from ..telemetry import TelemetryTrace
+
+        n = int(f.tele_n)
+        samples = np.asarray(f.tele_buf)[:n].astype(np.int64)
+        n_events = int(f.n_events)
+        expected = -(-n_events // stride)
+        if n_events and (n_events - 1) % stride:
+            expected += 1             # the conditional end-of-sim sample
+        counters = {
+            "dispatch_trips": int(f.ct_disp_trips),
+            "shadow_trips": int(f.ct_shadow_trips),
+            "backfill_admits": int(f.ct_backfill),
+            "misfit_skips": int(f.ct_misfit),
+            "fail_drain_trips": int(f.fptr) - int(sim.state.fptr),
+        }
+        cap = np.asarray(f.capacity).sum(axis=0)
+        rts = sim.meta.resource_types
+        return TelemetryTrace(
+            engine="fleet", name=sim.name, stride=stride,
+            resource_types=tuple(rts), samples=samples,
+            phase_counters=counters,
+            capacity={rt: int(cap[c]) for c, rt in enumerate(rts)},
+            truncated=expected > cap_s)
 
     # ------------------------------------------------------------------
     def records(self, i: int) -> List[Dict[str, object]]:
@@ -197,7 +242,19 @@ class FleetResult:
                     "rss_mb": rss,
                 }) + b"\n")
             fh.write(_dumps({"summary": summ}) + b"\n")
+        self.write_telemetry(output_dir, i)
         return out_path, bench_path
+
+    def write_telemetry(self, output_dir: str, i: int) -> Optional[str]:
+        """Write sim ``i``'s ``{name}-telemetry.jsonl`` (the same
+        structured-trace stream the host simulator emits); no-op (None)
+        for telemetry-free lanes."""
+        tele = self.telemetry(i)
+        if tele is None:
+            return None
+        os.makedirs(output_dir, exist_ok=True)
+        return tele.write_jsonl(os.path.join(
+            output_dir, f"{self.sims[i].name}-telemetry.jsonl"))
 
 
 # padding buckets: row capacity rounds up to a multiple of _BUCKET_ROWS,
@@ -234,9 +291,11 @@ class FleetRunner:
         local device is present.
 
     Compile caching: sims are padded to *bucketed* ``(M, K)`` shapes
-    (rows to a multiple of 64, width to a power of two — padding is
-    inert, pinned by tests), and the AOT-compiled executable is cached
-    process-wide per ``(batch, M, K, N, R, flags, devices)``, so repeated
+    (rows to a multiple of 64, width to a power of two, failure events
+    to a multiple of 16, telemetry sample capacity to a multiple of 64 —
+    0 stays 0 in both cases so the specialized engines survive; padding
+    is inert, pinned by tests), and the AOT-compiled executable is cached
+    process-wide per ``(batch, M, K, F, S, N, R, flags, devices)``, so repeated
     grids of the same rounded-up shape skip the jit entirely
     (``FleetResult.cache_hit``; compile time was ~2.3x the run time of a
     36-sim grid before caching).
@@ -260,14 +319,20 @@ class FleetRunner:
     def build(name: str, workload: Iterable, sys_config: Dict,
               sched_id: int, alloc_id: int = 0, job_factory=None,
               seed: Optional[int] = None, failures=None,
-              quarantine_s: int = 0, ckpt_every_s: int = 0) -> FleetSim:
+              quarantine_s: int = 0, ckpt_every_s: int = 0,
+              telemetry_stride: int = 0,
+              telemetry_samples: Optional[int] = None) -> FleetSim:
         """Materialize one grid point from a workload.  ``failures`` /
         ``quarantine_s`` / ``ckpt_every_s`` install a device-resident
-        FAIL/REPAIR schedule (``Simulator(failures=...)`` semantics)."""
+        FAIL/REPAIR schedule (``Simulator(failures=...)`` semantics).
+        ``telemetry_stride`` > 0 allocates device-resident telemetry
+        buffers (DESIGN.md §10) decoded by ``FleetResult.telemetry``."""
         state, meta = SimState.from_workload(
             workload, sys_config, job_factory=job_factory,
             sched_id=sched_id, alloc_id=alloc_id, failures=failures,
-            quarantine_s=quarantine_s, ckpt_every_s=ckpt_every_s)
+            quarantine_s=quarantine_s, ckpt_every_s=ckpt_every_s,
+            telemetry_stride=telemetry_stride,
+            telemetry_samples=telemetry_samples)
         return FleetSim(name=name, state=state, meta=meta,
                         sched_id=sched_id, alloc_id=alloc_id, seed=seed)
 
@@ -337,7 +402,12 @@ class FleetRunner:
         # in the batch has a schedule) compiles the failure-free engine
         fev = max(s.state.fail_ev.shape[0] for s in sims)
         fev = -(-fev // 16) * 16 if fev else 0
-        padded = [s.state.pad_to(m, k, fev) for s in sims]
+        # telemetry sample capacity buckets like rows (multiple of 64) so
+        # stride sweeps share an executable; ts == 0 (no sim in the batch
+        # carries buffers) compiles the exact telemetry-free engine
+        ts = max(s.state.tele_buf.shape[0] for s in sims)
+        ts = -(-ts // _BUCKET_ROWS) * _BUCKET_ROWS if ts else 0
+        padded = [s.state.pad_to(m, k, fev, ts) for s in sims]
 
         mesh = self.mesh
         n_dev = 1
@@ -366,7 +436,7 @@ class FleetRunner:
         stacked = jax.tree.map(lambda *xs: np.stack(xs), *batch)
 
         n, r = padded[0].avail.shape
-        key = (len(batch), m, k, fev, n, r, self.use_kernel,
+        key = (len(batch), m, k, fev, ts, n, r, self.use_kernel,
                self.interpret, mesh_key, jax.default_backend())
         compiled = self._compile_cache.get(key)
         cache_hit = compiled is not None

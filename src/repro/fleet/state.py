@@ -122,6 +122,22 @@ class SimState(NamedTuple):
     n_requeued: np.ndarray        # victims preempted + re-queued
     lost_work_s: np.ndarray       # re-run seconds (net of ckpt credit)
     node_downtime_s: np.ndarray   # summed fail->repair outage seconds
+    # --- device-resident telemetry (DESIGN.md §10) ----------------------
+    # ``tele_buf [S, 5 + R]`` is the downsampled sample matrix (columns:
+    # t, queue, running, started_cum, requeued_cum, free per resource
+    # type); ``S = 0`` means "telemetry off" and compiles the exact
+    # pre-telemetry engine (static specialization, like ``F = 0``).  The
+    # stride is DYNAMIC data (0-d), so stride sweeps share one
+    # executable; ``stride = 0`` disables writes, keeping telemetry-off
+    # sims inert when padded into a telemetry-on batch.  The per-phase
+    # trip counters accumulate in-carry, one add per event.
+    tele_stride: np.ndarray       # 0-d sampling stride (0 = off)
+    tele_n: np.ndarray            # 0-d samples written
+    tele_buf: np.ndarray          # [S, 5 + R] sample matrix
+    ct_disp_trips: np.ndarray     # 0-d greedy allocation probes
+    ct_shadow_trips: np.ndarray   # 0-d shadow-walk release iterations
+    ct_backfill: np.ndarray       # 0-d backfill admissions
+    ct_misfit: np.ndarray         # 0-d backfill candidates not admitted
 
     # ------------------------------------------------------------------
     @property
@@ -133,24 +149,32 @@ class SimState(NamedTuple):
         return int(self.avail.shape[0])
 
     # ------------------------------------------------------------------
-    def pad_to(self, m: int, k: int, fev: Optional[int] = None) -> "SimState":
-        """Grow row capacity to ``m``, the assignment width to ``k`` and
-        the failure-schedule length to ``fev`` (no-op if already that
-        size) — fleet batching pads every sim to the common shape before
-        stacking.  Pad rows carry the blank defaults (COMPLETED state,
-        INF submit); pad failure events carry ``t = INF_I``, which the
-        drain loop never reaches."""
+    def pad_to(self, m: int, k: int, fev: Optional[int] = None,
+               ts: Optional[int] = None) -> "SimState":
+        """Grow row capacity to ``m``, the assignment width to ``k``, the
+        failure-schedule length to ``fev`` and the telemetry sample
+        capacity to ``ts`` (no-op if already that size) — fleet batching
+        pads every sim to the common shape before stacking.  Pad rows
+        carry the blank defaults (COMPLETED state, INF submit); pad
+        failure events carry ``t = INF_I``, which the drain loop never
+        reaches; pad telemetry rows stay zero (``tele_n`` never reaches
+        them — and a telemetry-off sim padded into a telemetry-on batch
+        keeps ``tele_stride = 0``, so it never writes at all)."""
         m0, k0 = self.n_rows, self.assigned.shape[1]
         f0 = self.fail_ev.shape[0]
+        s0 = self.tele_buf.shape[0]
         if fev is None:
             fev = f0
-        if m < m0 or k < k0 or fev < f0:
+        if ts is None:
+            ts = s0
+        if m < m0 or k < k0 or fev < f0 or ts < s0:
             raise ValueError(
-                f"cannot shrink ({m0},{k0},{f0}) -> ({m},{k},{fev})")
-        if m == m0 and k == k0 and fev == f0:
+                f"cannot shrink ({m0},{k0},{f0},{s0}) -> "
+                f"({m},{k},{fev},{ts})")
+        if m == m0 and k == k0 and fev == f0 and ts == s0:
             return self
         n, r = self.avail.shape
-        f = self._blank(m, n, r, k, fev)
+        f = self._blank(m, n, r, k, fev, ts)
         e0 = self.log_t.shape[0]
         for name, val in self._asdict().items():
             cur = np.asarray(val)
@@ -163,6 +187,8 @@ class SimState(NamedTuple):
                 f[name][:m0, :k0] = cur
             elif name == "fail_ev":
                 f[name][:f0] = cur
+            elif name == "tele_buf":
+                f[name][:s0] = cur
             elif name.startswith("log_"):
                 f[name][:e0] = cur
             elif name in ("avail", "capacity", "node_up", "quar_until",
@@ -175,7 +201,7 @@ class SimState(NamedTuple):
     # ------------------------------------------------------------------
     @classmethod
     def _blank(cls, m: int, n: int, r: int, k: int,
-               fev: int = 0) -> Dict[str, np.ndarray]:
+               fev: int = 0, ts: int = 0) -> Dict[str, np.ndarray]:
         e = 2 * m + fev + 8
         i32 = np.int32
         fail_ev = np.zeros((fev, 3), i32)
@@ -202,6 +228,10 @@ class SimState(NamedTuple):
             down_since=np.full(n, -1, i32),
             quarantine_s=i32(0), ckpt_every_s=i32(0),
             n_requeued=i32(0), lost_work_s=i32(0), node_downtime_s=i32(0),
+            tele_stride=i32(0), tele_n=i32(0),
+            tele_buf=np.zeros((ts, 5 + r), i32),
+            ct_disp_trips=i32(0), ct_shadow_trips=i32(0),
+            ct_backfill=i32(0), ct_misfit=i32(0),
         )
 
     # ------------------------------------------------------------------
@@ -218,6 +248,8 @@ class SimState(NamedTuple):
         failures=None,
         quarantine_s: int = 0,
         ckpt_every_s: int = 0,
+        telemetry_stride: int = 0,
+        telemetry_samples: Optional[int] = None,
     ) -> Tuple["SimState", "SimMeta"]:
         """Load a whole workload into a fresh fixed-capacity state.
 
@@ -262,9 +294,10 @@ class SimState(NamedTuple):
                 ckpt = CheckpointRestartPolicy(ckpt_every_s)
             em.set_failure_schedule(*arrays, checkpoint=ckpt,
                                     quarantine_s=quarantine_s)
-        return cls.from_event_manager(em, sched_id=sched_id,
-                                      alloc_id=alloc_id, k_nodes=k_nodes,
-                                      capacity_rows=capacity_rows)
+        return cls.from_event_manager(
+            em, sched_id=sched_id, alloc_id=alloc_id, k_nodes=k_nodes,
+            capacity_rows=capacity_rows, telemetry_stride=telemetry_stride,
+            telemetry_samples=telemetry_samples)
 
     # ------------------------------------------------------------------
     @classmethod
@@ -275,8 +308,18 @@ class SimState(NamedTuple):
         alloc_id: int = 0,
         k_nodes: Optional[int] = None,
         capacity_rows: Optional[int] = None,
+        telemetry_stride: int = 0,
+        telemetry_samples: Optional[int] = None,
     ) -> Tuple["SimState", "SimMeta"]:
         """Snapshot a live (possibly mid-simulation) event manager.
+
+        ``telemetry_stride`` > 0 sizes a device-resident telemetry buffer
+        (DESIGN.md §10): one sample row every ``stride`` events plus a
+        final end-of-sim row.  ``telemetry_samples`` overrides the
+        default capacity ``ceil((2M + 8 + 2F) / stride) + 1``, which
+        covers every run except pathological requeue storms (each
+        requeue adds one completion event); an overfull buffer stops
+        writing and the decoded trace is flagged ``truncated``.
 
         The workload source must be exhausted — the compiled loop cannot
         pull from a Python iterator, so every future submission has to
@@ -306,7 +349,16 @@ class SimState(NamedTuple):
 
         ft = getattr(em, "_fail_t", None)
         nf = 0 if ft is None else int(ft.shape[0])
-        f = cls._blank(m, n, r, k_nodes, nf)
+        stride = max(int(telemetry_stride), 0)
+        if stride > 0:
+            ts = telemetry_samples if telemetry_samples is not None else \
+                -(-(2 * m + 8 + 2 * nf) // stride) + 1
+            ts = max(int(ts), 1)
+        else:
+            ts = 0
+        f = cls._blank(m, n, r, k_nodes, nf, ts)
+        if stride > 0:
+            f["tele_stride"] = np.int32(stride)
         cols = {c: np.zeros(m, dtype=np.int64) for c in _INT_COLS}
         for c in _INT_COLS:
             cols[c][:lim] = getattr(table, c)[:lim]

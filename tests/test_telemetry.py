@@ -1,0 +1,291 @@
+"""Unified telemetry layer (DESIGN.md §10): one observability schema
+across the host event loop and the compiled fleet engine.
+
+The decisive contract: the same workload at the same event stride must
+produce BIT-IDENTICAL sample matrices and phase-counter totals on both
+engines — pinned here for FIFO×FF and EBF×FF, with and without a seeded
+failure schedule — while S=0 (telemetry off) lanes keep the exact
+pre-telemetry engine behavior and compile cache.
+
+Satellites covered alongside: ``UtilizationMonitor`` stride edge cases
+(first event, end-of-sim sample, mid-run resource types), the JSONL
+structured-trace round trip, telemetry plots, the stride-sweep compile
+cache bucket, and the ``bench_metadata`` peak-RSS/CPU stamp.
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.cluster import FailureInjector
+from repro.cluster.failures import CheckpointRestartPolicy
+from repro.core import Simulator
+from repro.core.dispatchers import (EasyBackfilling, FirstFit,
+                                    FirstInFirstOut)
+from repro.core.job import JobFactory
+from repro.core.monitors import UtilizationMonitor
+from repro.experimentation import metrics
+from repro.experimentation.plot_factory import TELEMETRY_PLOTS, PlotFactory
+from repro.fleet import SCHED_EBF, SCHED_FIFO, ALLOC_FF, FleetRunner
+from repro.telemetry import PHASE_KEYS, TelemetryTrace, telemetry_columns
+from repro.workloads.synthetic import SyntheticWorkload
+
+# the golden scenario of test_fleet_engine.py: 10 nodes in two groups
+SYS = {"groups": {"a": {"core": 4, "mem": 1024}, "b": {"core": 8, "mem": 2048}},
+       "nodes": {"a": 6, "b": 4}}
+N_NODES = 10
+STRIDE = 5
+
+
+def _workload(n=120, seed=11):
+    return SyntheticWorkload(
+        n, seed=seed, mean_interarrival_s=25.0, duration_median_s=900.0,
+        duration_sigma=1.1, node_weights={1: 0.5, 2: 0.3, 4: 0.2},
+        resources={"core": (1, 4), "mem": (64, 1024)})
+
+
+def _injector(seed=3):
+    return FailureInjector(N_NODES, mtbf_s=4000.0, repair_s=900.0,
+                           horizon_s=6000, seed=seed)
+
+
+def _host_trace(sched, tmp_path, name, failures=False, stride=STRIDE):
+    kw = {}
+    if failures:
+        kw = dict(failures=_injector(),
+                  checkpoint=CheckpointRestartPolicy(600),
+                  quarantine_s=1800)
+    sim = Simulator(_workload(), SYS, sched, job_factory=JobFactory(),
+                    output_dir=str(tmp_path), name=name,
+                    telemetry_stride=stride, **kw)
+    sim.start_simulation(write_output=False)
+    return sim.telemetry, sim.summary
+
+
+def _fleet_result(sc, name, failures=False, stride=STRIDE, **build_kw):
+    if failures:
+        build_kw = dict(failures=_injector(), quarantine_s=1800,
+                        ckpt_every_s=600, **build_kw)
+    return FleetRunner().run([FleetRunner.build(
+        name, _workload(), SYS, sc, alloc_id=ALLOC_FF,
+        job_factory=JobFactory(), telemetry_stride=stride, **build_kw)])
+
+
+# ----------------------------------------------------------------------
+# tentpole: host/fleet telemetry parity
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("tag,sched,sc", [
+    ("FIFO-FF", lambda: FirstInFirstOut(FirstFit()), SCHED_FIFO),
+    ("EBF-FF", lambda: EasyBackfilling(FirstFit()), SCHED_EBF),
+])
+def test_host_fleet_telemetry_parity(tag, sched, sc, tmp_path):
+    """Same workload, same stride: bit-identical sample matrices and
+    phase-counter totals on both engines, surfaced identically in both
+    summaries."""
+    host, host_summary = _host_trace(sched(), tmp_path, tag)
+    res = _fleet_result(sc, tag)
+    fleet = res.telemetry(0)
+    assert host.n_samples > 2
+    host.assert_parity(fleet)
+    assert host.capacity == fleet.capacity
+    # the summary telemetry block mirrors the trace on both engines
+    assert host_summary["telemetry"]["phase_counters"] == \
+        res.summary(0)["telemetry"]["phase_counters"]
+    assert host_summary["telemetry"]["n_samples"] == fleet.n_samples
+    if tag.startswith("EBF"):
+        assert fleet.phase_counters["shadow_trips"] > 0
+        assert fleet.phase_counters["backfill_admits"] > 0
+
+
+def test_host_fleet_telemetry_parity_under_failures(tmp_path):
+    """The parity contract holds through a seeded FAIL/REPAIR schedule,
+    including the requeue column and the failure-drain trip counter."""
+    host, _ = _host_trace(FirstInFirstOut(FirstFit()), tmp_path,
+                          "fail-tele", failures=True)
+    fleet = _fleet_result(SCHED_FIFO, "fail-tele",
+                          failures=True).telemetry(0)
+    host.assert_parity(fleet)
+    assert fleet.phase_counters["fail_drain_trips"] > 0
+    assert int(fleet.column("requeued_cum")[-1]) > 0
+
+
+# ----------------------------------------------------------------------
+# tentpole: S=0 keeps the pre-telemetry engine
+# ----------------------------------------------------------------------
+def test_telemetry_off_is_structurally_absent_and_inert():
+    """stride=0 builds S=0 states (no buffers in the pytree) and the
+    dispatch trajectory is identical with telemetry on — observability
+    must never change a decision."""
+    off = _fleet_result(SCHED_FIFO, "off", stride=0)
+    assert off.sims[0].state.tele_buf.shape[0] == 0
+    assert off.telemetry(0) is None
+    assert "telemetry" not in off.summary(0)
+    on = _fleet_result(SCHED_FIFO, "on", stride=STRIDE)
+    assert on.trace(0) == off.trace(0)
+
+
+def test_padded_telemetry_off_lane_stays_inert():
+    """A telemetry-off lane vmapped next to a telemetry-on lane is
+    padded with buffers but its stride stays 0: no sample is ever
+    written and its decisions match the solo launch."""
+    mixed = FleetRunner().run([
+        FleetRunner.build("on", _workload(), SYS, SCHED_FIFO,
+                          alloc_id=ALLOC_FF, job_factory=JobFactory(),
+                          telemetry_stride=STRIDE),
+        FleetRunner.build("off", _workload(120, 12), SYS, SCHED_FIFO,
+                          alloc_id=ALLOC_FF, job_factory=JobFactory()),
+    ])
+    solo = FleetRunner().run([FleetRunner.build(
+        "off", _workload(120, 12), SYS, SCHED_FIFO, alloc_id=ALLOC_FF,
+        job_factory=JobFactory())])
+    assert int(mixed.finals[1].tele_n) == 0
+    assert mixed.telemetry(1) is None
+    assert mixed.trace(1) == solo.trace(0)
+    assert mixed.telemetry(0) is not None
+
+
+def test_stride_sweep_reuses_executable():
+    """The stride is dynamic data and the sample capacity buckets to a
+    multiple of 64, so a stride sweep shares ONE compiled executable."""
+    runner = FleetRunner()
+    first = runner.run([FleetRunner.build(
+        "s5", _workload(), SYS, SCHED_FIFO, alloc_id=ALLOC_FF,
+        job_factory=JobFactory(), telemetry_stride=5)])
+    for stride in (7, 10, 20):
+        again = runner.run([FleetRunner.build(
+            f"s{stride}", _workload(), SYS, SCHED_FIFO, alloc_id=ALLOC_FF,
+            job_factory=JobFactory(), telemetry_stride=stride)])
+        assert again.cache_hit, f"stride {stride} recompiled"
+        assert again.telemetry(0).stride == stride
+    assert first.telemetry(0).n_samples > again.telemetry(0).n_samples
+
+
+def test_tiny_capacity_flags_truncation():
+    # stride 1 over ~240 events against a 4-row request (bucketed up to
+    # one 64-row block): the buffer fills, writes stop, decode flags it
+    res = _fleet_result(SCHED_FIFO, "tiny", stride=1, telemetry_samples=4)
+    t = res.telemetry(0)
+    assert t.n_samples == 64          # capacity bucketed to one row block
+    assert t.truncated
+
+
+# ----------------------------------------------------------------------
+# satellite: UtilizationMonitor stride edge cases
+# ----------------------------------------------------------------------
+class _StubRM:
+    def __init__(self, rts, free):
+        self.resource_types = tuple(rts)
+        self.available = np.asarray([free], dtype=np.int64)
+
+    def utilization(self):
+        return {rt: 0.5 for rt in self.resource_types}
+
+
+class _StubEM:
+    def __init__(self, t, queued=0, running=0, completed=0, requeued=0,
+                 rts=("core",), free=(4,)):
+        self.current_time = t
+        self.n_queued = queued
+        self.n_running = running
+        self.n_completed = completed
+        self.n_requeued = requeued
+        self.rm = _StubRM(rts, free)
+
+
+def test_monitor_samples_first_event_and_finalizes():
+    """With sample_every > 1 the FIRST event (index 0) is recorded, and
+    finalize() appends the end-of-sim sample only when the last event
+    missed the stride."""
+    mon = UtilizationMonitor(sample_every=4)
+    for i in range(6):                # events 0..5 -> samples at 0, 4
+        mon.observe(_StubEM(t=10 * i))
+    assert mon.times == [0, 40]
+    mon.finalize(_StubEM(t=50))       # event 5 missed the stride
+    assert mon.times == [0, 40, 50]
+    mon2 = UtilizationMonitor(sample_every=4)
+    for i in range(5):                # events 0..4 -> samples at 0, 4
+        mon2.observe(_StubEM(t=10 * i))
+    mon2.finalize(_StubEM(t=40))      # event 4 WAS sampled: no-op
+    assert mon2.times == [0, 40]
+    mon3 = UtilizationMonitor(sample_every=4)
+    mon3.finalize(_StubEM(t=0))       # zero events: no-op
+    assert mon3.times == []
+
+
+def test_monitor_as_dict_pads_midrun_resource_types():
+    """A resource type first observed mid-run gets a front-padded
+    utilization series so every series aligns with ``times``; to_trace
+    zero-fills free units the same way."""
+    mon = UtilizationMonitor()
+    mon.observe(_StubEM(t=0, rts=("core",), free=(4,)))
+    mon.observe(_StubEM(t=10, rts=("core", "gpu"), free=(4, 2)))
+    d = mon.as_dict()
+    assert d["utilization"]["gpu"] == [0.0, 0.5]
+    assert len(d["utilization"]["core"]) == len(d["times"]) == 2
+    trace = mon.to_trace("mid", ("core", "gpu"), {"core": 4, "gpu": 2})
+    assert trace.free("gpu").tolist() == [0, 2]
+
+
+# ----------------------------------------------------------------------
+# satellite: JSONL round trip + plots
+# ----------------------------------------------------------------------
+def test_trace_jsonl_round_trip(tmp_path):
+    host, _ = _host_trace(FirstInFirstOut(FirstFit()), tmp_path, "rt")
+    path = host.write_jsonl(str(tmp_path / "rt-telemetry.jsonl"))
+    back = TelemetryTrace.read_jsonl(path)
+    host.assert_parity(back)
+    assert back.engine == "host" and back.capacity == host.capacity
+    assert not back.truncated
+    series = metrics.telemetry_series(path)
+    assert series["t"] == host.times.tolist()
+    assert set(series["utilization"]) == set(host.resource_types)
+    assert series["phase_counters"] == dict(host.phase_counters)
+
+
+def test_telemetry_plots_from_either_engine(tmp_path):
+    """The telemetry plot group renders from the structured trace files
+    whichever engine wrote them."""
+    host, _ = _host_trace(FirstInFirstOut(FirstFit()), tmp_path, "ph")
+    host.write_jsonl(str(tmp_path / "ph-telemetry.jsonl"))
+    res = _fleet_result(SCHED_FIFO, "pf")
+    res.write_telemetry(str(tmp_path), 0)
+    pf = PlotFactory("telemetry", SYS)
+    pf.set_files([str(tmp_path / "ph-output.jsonl"),
+                  str(tmp_path / "pf-output.jsonl")], ["host", "fleet"])
+    for kind in TELEMETRY_PLOTS:
+        out = pf.produce_plot(kind)
+        assert os.path.exists(out)
+
+
+def test_trace_schema_basics():
+    cols = telemetry_columns(("core", "mem"))
+    assert cols[:5] == ("t", "queue", "running", "started_cum",
+                        "requeued_cum")
+    assert cols[5:] == ("free_core", "free_mem")
+    with pytest.raises(ValueError):
+        TelemetryTrace(engine="host", name="bad", stride=1,
+                       resource_types=("core",),
+                       samples=np.zeros((3, 9), dtype=np.int64))
+    t = TelemetryTrace(engine="host", name="ok", stride=1,
+                       resource_types=("core",),
+                       samples=np.zeros((0, 6), dtype=np.int64),
+                       phase_counters={"dispatch_trips": 3})
+    assert set(t.phase_counters) == set(PHASE_KEYS)
+    assert t.utilization("core").shape == (0,)
+
+
+# ----------------------------------------------------------------------
+# satellite: bench metadata environment stamp
+# ----------------------------------------------------------------------
+def test_bench_metadata_reports_peak_rss_and_cpu():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    try:
+        from benchmarks.common import bench_metadata
+    finally:
+        sys.path.pop(0)
+    meta = bench_metadata()
+    assert meta["peak_rss_mb"] > 0
+    assert meta["cpu_time_s"] > 0
+    from repro.utils import peak_rss_mb, rss_mb
+    assert peak_rss_mb() >= rss_mb() * 0.9   # HWM can never trail far
